@@ -1,0 +1,197 @@
+"""Benchmark harness -- one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call measured on this
+host's CPU; `derived` carries the table's scientific quantity).
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run --only complexity
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    sti_knn_interactions, knn_shapley_values, loo_values, analysis)
+from repro.core.sti_baseline import brute_force_sti
+from repro.data import make_circles, make_moons, flip_labels
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)  # compile/warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _problem(n, t, d=16, seed=0):
+    rng = np.random.default_rng(seed)
+    return (jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)),
+            jnp.asarray(rng.integers(0, 2, n).astype(np.int32)),
+            jnp.asarray(rng.normal(size=(t, d)).astype(np.float32)),
+            jnp.asarray(rng.integers(0, 2, t).astype(np.int32)))
+
+
+# ---------------------------------------------------------------- table 1:
+# the headline claim -- exact pair interactions O(2^n) -> O(t n^2)
+def bench_speedup_vs_bruteforce():
+    rows = []
+    for n in (8, 10, 12):
+        x, y, xt, yt = _problem(n, 4)
+
+        def brute():
+            return brute_force_sti(np.asarray(x), np.asarray(y),
+                                   np.asarray(xt), np.asarray(yt), 3)
+
+        t0 = time.perf_counter()
+        brute()
+        t_brute = (time.perf_counter() - t0) * 1e6
+        t_fast = _time(sti_knn_interactions, x, y, xt, yt, 3)
+        rows.append((f"speedup_bruteforce_n{n}", t_fast,
+                     f"brute_us={t_brute:.0f};speedup={t_brute / t_fast:.1f}x"))
+    return rows
+
+
+# ------------------------------------------------------- complexity scaling:
+# time grows ~n^2 in train size and ~linearly in t (paper Sec. 3.2)
+def bench_complexity_scaling():
+    rows = []
+    times = {}
+    for n in (512, 1024, 2048):
+        x, y, xt, yt = _problem(n, 64)
+        times[n] = _time(sti_knn_interactions, x, y, xt, yt, 5)
+        rows.append((f"scaling_n{n}", times[n], ""))
+    exp_n = np.log(times[2048] / times[512]) / np.log(4)
+    rows.append(("scaling_exponent_n", 0.0, f"alpha={exp_n:.2f} (expect ~2)"))
+    tt = {}
+    for t in (32, 128, 512):
+        x, y, xt, yt = _problem(1024, t)
+        tt[t] = _time(sti_knn_interactions, x, y, xt, yt, 5, test_batch=32)
+        rows.append((f"scaling_t{t}", tt[t], ""))
+    exp_t = np.log(tt[512] / tt[32]) / np.log(16)
+    rows.append(("scaling_exponent_t", 0.0, f"alpha={exp_t:.2f} (expect ~1)"))
+    return rows
+
+
+# ------------------------------------------------------------ baselines:
+def bench_baselines():
+    x, y, xt, yt = _problem(2048, 256)
+    rows = [
+        ("knn_shapley_n2048_t256", _time(knn_shapley_values, x, y, xt, yt, 5), ""),
+        ("loo_n2048_t256", _time(loo_values, x, y, xt, yt, 5), ""),
+        ("sti_knn_n2048_t256", _time(sti_knn_interactions, x, y, xt, yt, 5), ""),
+        ("sti_knn_sii_n2048_t256",
+         _time(lambda: sti_knn_interactions(x, y, xt, yt, 5, mode="sii")), ""),
+    ]
+    return rows
+
+
+# ----------------------------------------------------- paper Appendix B:
+# k-invariance of the interaction matrix (Pearson > 0.99)
+def bench_k_invariance():
+    rows = []
+    for name, maker in (("circle", make_circles), ("moon", make_moons)):
+        x, y = maker(150, noise=0.08, seed=3)
+        xt, yt = maker(50, noise=0.08, seed=4)
+        ks = (3, 5, 9, 15, 20)
+        phis = {k: sti_knn_interactions(x, y, xt, yt, k) for k in ks}
+        cmin = min(
+            float(analysis.k_invariance_correlation(phis[a], phis[b]))
+            for i, a in enumerate(ks) for b in ks[i + 1:])
+        rows.append((f"k_invariance_{name}", 0.0,
+                     f"min_pearson={cmin:.4f} (paper: >0.99)"))
+    return rows
+
+
+# --------------------------------------------------------- paper Fig. 5:
+# mislabel detection via interaction patterns
+def bench_mislabel_detection():
+    rows = []
+    for frac in (0.05, 0.1, 0.2):
+        x, y_clean = make_circles(300, noise=0.08, seed=0)
+        y, flipped = flip_labels(y_clean, frac, 2, seed=1)
+        xt, yt = make_circles(100, noise=0.08, seed=2)
+        t0 = time.perf_counter()
+        phi = sti_knn_interactions(x, y, xt, yt, 5)
+        scores = analysis.mislabel_scores(phi, y, 2)
+        jax.block_until_ready(scores)
+        us = (time.perf_counter() - t0) * 1e6
+        order = np.argsort(-np.asarray(scores))
+        nf = int(np.asarray(flipped).sum())
+        prec = float(np.asarray(flipped)[order[:nf]].mean())
+        rows.append((f"mislabel_frac{frac}", us, f"precision@k={prec:.2f}"))
+    return rows
+
+
+# --------------------------------------------------------- paper Fig. 3/4:
+# in-class vs out-of-class interaction; redundancy effect
+def bench_interaction_structure():
+    x, y = make_circles(300, noise=0.08, seed=0)
+    xt, yt = make_circles(100, noise=0.08, seed=2)
+    phi = sti_knn_interactions(x, y, xt, yt, 5)
+    s = analysis.class_block_summary(phi, y, 2)
+    rows = [("in_vs_out_class", 0.0,
+             f"in={float(jnp.mean(s.in_class_mean)):.2e};"
+             f"out={float(s.out_class_mean):.2e}")]
+    # redundancy (Fig. 4): halving class-0 points strengthens the
+    # surviving points' per-pair share
+    x2 = jnp.concatenate([x[:150], x[300:]])
+    y2 = jnp.concatenate([y[:150], y[300:]])
+    phi2 = sti_knn_interactions(x2, y2, xt, yt, 5)
+    s2 = analysis.class_block_summary(phi2, y2, 2)
+    rows.append(("redundancy_effect", 0.0,
+                 f"balanced_in0={float(s.in_class_mean[0]):.2e};"
+                 f"halved_in0={float(s2.in_class_mean[0]):.2e}"))
+    return rows
+
+
+# ------------------------------------------------------------ kernels:
+def bench_kernels():
+    from repro.kernels import ref
+    from repro.kernels.sti_fill import sti_fill_pallas
+    rng = np.random.default_rng(0)
+    t, n = 16, 512
+    g = jnp.asarray(rng.normal(size=(t, n)).astype(np.float32))
+    ranks = jnp.asarray(
+        np.stack([rng.permutation(n) for _ in range(t)]).astype(np.int32))
+    rows = [
+        ("sti_fill_xla_t16_n512", _time(ref.sti_fill_ref, g, ranks), ""),
+        ("sti_fill_pallas_interp_t16_n512",
+         _time(sti_fill_pallas, g, ranks, interpret=True, reps=1),
+         "interpret-mode (correctness only; perf target is TPU)"),
+    ]
+    return rows
+
+
+BENCHES = {
+    "speedup": bench_speedup_vs_bruteforce,
+    "complexity": bench_complexity_scaling,
+    "baselines": bench_baselines,
+    "k_invariance": bench_k_invariance,
+    "mislabel": bench_mislabel_detection,
+    "structure": bench_interaction_structure,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for nm in names:
+        for row in BENCHES[nm]():
+            print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Analytic roofline for the STI-KNN fill at the paper-cell scale:
+XLA path (measured by the dry-run) vs the Pallas `sti_fill` kernel
+(traffic derived from its BlockSpec tiling -- the kernel cannot be
+compiled by the CPU backend, so its term is analytic by construction).
+
+    PYTHONPATH=src python -m benchmarks.sti_kernel_roofline
+"""
+
+from __future__ import annotations
+
+from repro.configs.sti_knn_paper import CONFIG as SCFG
+from repro.launch.hlo_analysis import HW
+
+N = SCFG.n_train           # 65536 train points
+D = SCFG.feat_dim
+TC = SCFG.test_chunk       # 4096 global test points / step
+CHIPS = 256
+MODEL = 16                 # model-axis size
+DP = CHIPS // MODEL
+
+n_local = N // MODEL       # phi columns per chip
+t_local = TC // DP         # test points per chip
+
+# ------------------------------------------------------------- XLA path
+# per test point the scan materializes max-matrix (i32) + gather (f32) and
+# RMWs the f32 accumulator: ~(4 + 4 + 8) bytes per (a, col) cell
+xla_traffic = t_local * N * n_local * 16
+# ----------------------------------------------------------- Pallas path
+BT = max(1, (4 << 20) // (4 * N))    # g rows per VMEM block (wrapper policy)
+BN = 256
+pallas_traffic = (
+    2 * (t_local // BT) * N * n_local * 4   # out tile RMW per t-block
+    + t_local * N * 4                        # g read once
+    + 2 * (t_local * N * 4) * (n_local // BN) / 1  # rank slices per (ia)
+)
+# distance GEMM + sort are shared by both paths
+flops = 2 * t_local * N * D + 3 * t_local * N * n_local
+
+
+def report():
+    t_c = flops / HW["peak_flops_bf16"]
+    for name, traffic in (("xla", xla_traffic), ("pallas", pallas_traffic)):
+        t_m = traffic / HW["hbm_bw"]
+        print(f"{name:7s} traffic/chip = {traffic/2**30:7.1f} GiB  "
+              f"t_mem = {t_m*1e3:8.2f} ms   t_compute = {t_c*1e3:6.2f} ms  "
+              f"-> {'memory' if t_m > t_c else 'compute'}-bound")
+    print(f"predicted kernel speedup on the fill: "
+          f"{xla_traffic / pallas_traffic:.1f}x  (BT={BT}, BN={BN})")
+
+
+if __name__ == "__main__":
+    report()

@@ -1,0 +1,98 @@
+"""End-to-end driver for the paper's pipeline (its production use case):
+
+  1. TRAIN a backbone LM (~100M-param class, reduced dims for CPU) on
+     synthetic token streams for a few hundred steps with the distributed
+     trainer (checkpointing + fault-tolerant loop);
+  2. EXTRACT mean-pooled embeddings for a labeled corpus (the paper's
+     "pre-trained feature extractor" pattern, Sec. 1);
+  3. VALUATE the corpus with STI-KNN and flag mislabeled examples.
+
+    PYTHONPATH=src python examples/end_to_end_valuation.py \
+        --steps 300 --d-model 128   # full driver (~100M: --d-model 768)
+"""
+
+import argparse
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import sti_knn_interactions, analysis
+from repro.data import make_token_batch, flip_labels
+from repro.launch.mesh import make_local_mesh
+from repro.models import build_model
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optimizer import AdamWConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--d-model", type=int, default=96)
+ap.add_argument("--layers", type=int, default=4)
+ap.add_argument("--vocab", type=int, default=512)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--ckpt-dir", default=None)
+args = ap.parse_args()
+
+cfg = ModelConfig(
+    name="backbone", family="dense", num_layers=args.layers,
+    d_model=args.d_model, num_heads=4, num_kv_heads=2,
+    head_dim=args.d_model // 4, d_ff=args.d_model * 4,
+    vocab_size=args.vocab, tp_pad_heads=1, vocab_pad=64, dtype=jnp.float32)
+model = build_model(cfg)
+
+# ---- 1. train ------------------------------------------------------------
+mesh = make_local_mesh()
+tcfg = TrainerConfig(
+    steps=args.steps, log_every=max(1, args.steps // 6),
+    ckpt_dir=args.ckpt_dir, ckpt_every=max(10, args.steps // 2),
+    opt=AdamWConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                    total_steps=args.steps))
+tr = Trainer(cfg, tcfg, mesh)
+params, opt_state = tr.init_state(0)
+
+
+def batch_fn(step):
+    toks, labels = make_token_batch(
+        jax.random.key(step), args.batch, args.seq, cfg.vocab_size)
+    return {"tokens": toks, "labels": labels}
+
+
+params, _, hist = tr.fit(params, opt_state, batch_fn)
+print(f"[train] loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+# ---- 2. a labeled corpus: two token "dialects" + 10% label noise ---------
+rng = np.random.default_rng(0)
+n, t = 256, 64
+
+
+def corpus(count, seed):
+    r = np.random.default_rng(seed)
+    labels = r.integers(0, 2, count).astype(np.int32)
+    # class 0 draws from the low half of the vocab, class 1 from the high
+    toks = np.where(
+        labels[:, None] == 0,
+        r.integers(0, args.vocab // 2, (count, args.seq)),
+        r.integers(args.vocab // 2, args.vocab, (count, args.seq)),
+    ).astype(np.int32)
+    return jnp.asarray(toks), jnp.asarray(labels)
+
+
+train_toks, train_labels_clean = corpus(n, 1)
+test_toks, test_labels = corpus(t, 2)
+train_labels, flipped = flip_labels(train_labels_clean, 0.1, 2, seed=3)
+
+# ---- 3. embed + valuate ---------------------------------------------------
+embed = jax.jit(lambda p, toks: model.embed(p, {"tokens": toks}))
+x_train = embed(params, train_toks)
+x_test = embed(params, test_toks)
+phi = sti_knn_interactions(x_train, train_labels, x_test, test_labels, k=5)
+scores = analysis.mislabel_scores(phi, train_labels, 2)
+order = np.argsort(-np.asarray(scores))
+nf = int(np.asarray(flipped).sum())
+prec = float(np.asarray(flipped)[order[:nf]].mean())
+print(f"[valuate] mislabel precision@{nf}: {prec:.2f} "
+      f"(chance: {nf / n:.2f})")
+assert prec > 2 * nf / n, "valuation should beat chance by 2x"
+print("[ok] end-to-end pipeline complete")

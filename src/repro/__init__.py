@@ -1,0 +1,20 @@
+"""repro: STI-KNN data valuation at pod scale (JAX + Pallas).
+
+Public API re-exports; see README.md.
+"""
+
+from repro.core import (
+    sti_knn_interactions,
+    knn_shapley_values,
+    loo_values,
+    analysis,
+)
+from repro.core.valuation import DataValuator
+
+__all__ = [
+    "sti_knn_interactions",
+    "knn_shapley_values",
+    "loo_values",
+    "analysis",
+    "DataValuator",
+]

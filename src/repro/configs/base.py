@@ -1,0 +1,198 @@
+"""Model/config schema + parameter-description infrastructure.
+
+Params are described by `PD` (shape + logical axes + init) trees; `init`
+materializes them, `spec_tree` maps logical axes onto mesh axes via a rule
+table. This keeps model math, initialization, and sharding in one place
+(MaxText-style logical axis names, without a framework dependency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ModelConfig", "ShapeSpec", "PD", "init_params", "spec_tree",
+           "abstract_params", "DEFAULT_RULES", "FSDP_RULES", "pad_to"]
+
+
+def pad_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 2
+    moe_d_ff: int = 0              # 0 -> d_ff
+    moe_period: int = 1            # MoE every `period` layers (jamba: 2)
+    capacity_factor: float = 1.25
+    moe_group_size: int = 2048
+    # attention variants
+    sliding_window: Optional[int] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    # layer mixing (hybrid / ssm families); one "group" is scanned
+    group_size: int = 1            # layers per scanned super-block
+    attn_layer_in_group: tuple = ()  # indices within group that are attention
+    ssm_kind: Optional[str] = None  # "mamba" | "mlstm"
+    slstm_layer_in_group: tuple = ()  # xlstm: indices that are sLSTM
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    dt_rank: int = 0               # 0 -> d_model // 16
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0           # stub frontend positions (frames)
+    # vlm
+    num_patches: int = 0
+    # misc
+    norm_eps: float = 1e-5
+    norm_kind: str = "rmsnorm"     # rmsnorm | layernorm
+    act: str = "silu"              # silu (swiglu) | gelu (plain mlp)
+    tie_embeddings: bool = False
+    max_seq_len: int = 524288
+    dtype: Any = jnp.bfloat16
+    # distribution knobs (overridable per run)
+    tp_pad_heads: int = 16         # pad head count to a multiple of this
+    vocab_pad: int = 256
+    mlstm_chunk: int = 256
+    mamba_chunk: int = 512
+    remat: str = "block"           # none | block | full
+    # full-unroll makes XLA cost_analysis count every layer (while-loop
+    # bodies are otherwise costed once); the dry-run sets this.
+    scan_unroll: bool = False
+    kv_block: int = 1024           # flash-attention KV block (XLA path)
+    # FSDP: params/opt STORED sharded over data; at use each group's weights
+    # are constrained to the TP-only spec => XLA emits the all-gather (fwd)
+    # / reduce-scatter (bwd) pair instead of partitioning matmuls by the
+    # contracting dim (which all-reduces activations -- see EXPERIMENTS.md).
+    fsdp_constrain: bool = False
+    logits_f32: bool = True        # False: bf16 vocab matmul, f32 accum
+    # When set, MoE blocks run under shard_map((data_axes, model_axis)):
+    # the capacity scatter/gather stays device-local by construction and
+    # the only collective is one psum of the combined output over 'model'.
+    shmap_axes: tuple = ()         # e.g. (("data",), "model")
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def padded_heads(self) -> int:
+        """Q heads padded so TP divides evenly; padded heads have zero
+        output rows => exact math, counted as waste in the roofline."""
+        return pad_to(self.num_heads, self.tp_pad_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to(self.vocab_size, self.vocab_pad)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank_(self) -> int:
+        return self.dt_rank or max(1, self.d_model // 16)
+
+    @property
+    def num_groups(self) -> int:
+        assert self.num_layers % self.group_size == 0
+        return self.num_layers // self.group_size
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell of the dry-run grid."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+# ----------------------------------------------------------------- param desc
+@dataclass(frozen=True)
+class PD:
+    shape: tuple
+    axes: tuple            # logical axis names (len == len(shape))
+    init: str = "normal"   # normal | zeros | ones | embed
+    scale: float = 0.0     # 0 -> 1/sqrt(fan_in) (fan_in = shape[0])
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _leaf_init(pd: PD, key, dtype):
+    if pd.init == "zeros":
+        return jnp.zeros(pd.shape, dtype)
+    if pd.init == "ones":
+        return jnp.ones(pd.shape, dtype)
+    scale = pd.scale or (1.0 / max(pd.shape[0], 1) ** 0.5)
+    if pd.init == "embed":
+        scale = pd.scale or 0.02
+    return (jax.random.normal(key, pd.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(desc, key, dtype=jnp.float32):
+    """Materialize a PD tree; per-leaf keys are derived by path fold-in."""
+    leaves, treedef = jax.tree.flatten(desc, is_leaf=lambda x: isinstance(x, PD))
+    keys = [jax.random.fold_in(key, i) for i in range(len(leaves))]
+    vals = [_leaf_init(pd, k, dtype) for pd, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(desc, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (no allocation) -- dry-run path."""
+    return jax.tree.map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype),
+        desc, is_leaf=lambda x: isinstance(x, PD),
+    )
+
+
+# Logical-axis -> mesh-axis rule tables. `None` = replicated.
+DEFAULT_RULES = {
+    None: None,
+    "embed": None,          # d_model
+    "heads": "model",
+    "kv": None,             # kv heads replicated (GQA, kv << tp)
+    "mlp": "model",
+    "vocab": "model",
+    "expert": None,         # expert count dim (E small) -- TP inside expert
+    "expert_mlp": "model",
+    "inner": "model",       # ssm/mlstm inner dim
+    "layers": None,         # stacked scan dim
+    "stage": None,
+    "dv": "model",          # mlstm value dim
+    "conv": None,
+    "state": None,
+}
+
+# FSDP variant: shard the d_model dim of big weights over the data axis
+# (XLA inserts all-gathers at use; optimizer state gets sharded for free).
+FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+
+def spec_tree(desc, rules=DEFAULT_RULES):
+    return jax.tree.map(
+        lambda pd: P(*[rules.get(a, None) for a in pd.axes]),
+        desc, is_leaf=lambda x: isinstance(x, PD),
+    )

@@ -1,0 +1,46 @@
+"""Architecture registry: --arch <id> -> config module."""
+
+from repro.configs import (
+    mixtral_8x7b, phi35_moe, xlstm_1_3b, qwen2_7b, smollm_360m,
+    phi3_mini, qwen3_1_7b, whisper_small, internvl2_2b, jamba_v01,
+    sti_knn_paper,
+)
+
+ARCHS = {
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "phi3.5-moe-42b-a6.6b": phi35_moe.CONFIG,
+    "xlstm-1.3b": xlstm_1_3b.CONFIG,
+    "qwen2-7b": qwen2_7b.CONFIG,
+    "smollm-360m": smollm_360m.CONFIG,
+    "phi3-mini-3.8b": phi3_mini.CONFIG,
+    "qwen3-1.7b": qwen3_1_7b.CONFIG,
+    "whisper-small": whisper_small.CONFIG,
+    "internvl2-2b": internvl2_2b.CONFIG,
+    "jamba-v0.1-52b": jamba_v01.CONFIG,
+}
+
+PAPER_WORKLOAD = sti_knn_paper.CONFIG
+
+
+def get_config(name: str):
+    if name == PAPER_WORKLOAD.name:
+        return PAPER_WORKLOAD
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+# Production training recipes derived from the EXPERIMENTS.md §Perf
+# hillclimb: (grad_accum, remat) per arch for the 16x16 train_4k cell.
+TRAIN_RECIPES = {
+    "mixtral-8x7b": {"grad_accum": 8, "remat": "dots"},
+    "phi3.5-moe-42b-a6.6b": {"grad_accum": 8, "remat": "dots"},
+    "jamba-v0.1-52b": {"grad_accum": 16, "remat": "block"},
+    "qwen2-7b": {"grad_accum": 8, "remat": "block"},
+    "phi3-mini-3.8b": {"grad_accum": 4, "remat": "block"},
+    "qwen3-1.7b": {"grad_accum": 8, "remat": "block"},
+    "internvl2-2b": {"grad_accum": 8, "remat": "block"},
+    "xlstm-1.3b": {"grad_accum": 4, "remat": "block"},
+    "smollm-360m": {"grad_accum": 1, "remat": "block"},
+    "whisper-small": {"grad_accum": 2, "remat": "block"},
+}

@@ -1,0 +1,23 @@
+from repro.core.sti_knn import (
+    sti_knn_interactions,
+    sti_knn_matrix_one_test,
+    superdiagonal_g,
+    pairwise_sq_dists,
+    ranks_from_distances,
+    register_fill_fn,
+)
+from repro.core.knn_shapley import knn_shapley_values
+from repro.core.loo import loo_values
+from repro.core import analysis
+
+__all__ = [
+    "sti_knn_interactions",
+    "sti_knn_matrix_one_test",
+    "superdiagonal_g",
+    "pairwise_sq_dists",
+    "ranks_from_distances",
+    "register_fill_fn",
+    "knn_shapley_values",
+    "loo_values",
+    "analysis",
+]

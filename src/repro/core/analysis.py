@@ -1,0 +1,99 @@
+"""Interaction-matrix analytics (paper Sec. 3.2 / Sec. 4).
+
+Implements the paper's discussed applications of the STI-KNN matrix:
+  * efficiency check:  sum(Phi) == test accuracy (STI efficiency axiom)
+  * in-class vs out-of-class interaction summaries (Fig. 3)
+  * redundancy effect (Fig. 4)
+  * mislabel detection (Fig. 5: mislabeled points' interaction pattern
+    matches the opposite class)
+  * training-set summarization / acquisition orderings from values
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "efficiency_gap",
+    "class_block_summary",
+    "mislabel_scores",
+    "summarize_keep_order",
+    "k_invariance_correlation",
+]
+
+
+def efficiency_gap(phi: jnp.ndarray, test_accuracy: jnp.ndarray) -> jnp.ndarray:
+    """|Sigma phi - a_test| (STI efficiency axiom).
+
+    The axiom sums first-order terms (diagonal) plus each UNORDERED pair
+    once: sum(diag) + sum(upper triangle) = v(N) - v(0). The paper states
+    'sum phi_ij = a_test' over its matrix; empirically (and by the STI
+    axiom) the unordered-pair convention is the one that holds exactly.
+    The 'accuracy' is the likelihood valuation v(N), matching the paper's
+    valuation function, not argmax accuracy.
+    """
+    once = jnp.sum(jnp.triu(phi))
+    return jnp.abs(once - test_accuracy)
+
+
+class ClassBlockSummary(NamedTuple):
+    in_class_mean: jnp.ndarray  # (c,) mean off-diag interaction within class
+    out_class_mean: jnp.ndarray  # scalar mean across-class interaction
+    diag_mean_per_class: jnp.ndarray  # (c,) mean main term per class
+
+
+def class_block_summary(phi: jnp.ndarray, labels: jnp.ndarray, num_classes: int) -> ClassBlockSummary:
+    """Mean interaction inside vs across class blocks (paper Fig. 3 analysis)."""
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=phi.dtype)  # (n, c)
+    off = phi - jnp.diag(jnp.diag(phi))
+    # block sums: (c, c)
+    block = onehot.T @ off @ onehot
+    counts = jnp.sum(onehot, axis=0)
+    pair_in = counts * (counts - 1)
+    in_mean = jnp.diag(block) / jnp.maximum(pair_in, 1)
+    total_off_pairs = phi.shape[0] * (phi.shape[0] - 1)
+    out_pairs = total_off_pairs - jnp.sum(pair_in)
+    out_mean = (jnp.sum(block) - jnp.sum(jnp.diag(block))) / jnp.maximum(out_pairs, 1)
+    diag_mean = (onehot.T @ jnp.diag(phi)) / jnp.maximum(counts, 1)
+    return ClassBlockSummary(in_mean, out_mean, diag_mean)
+
+
+def mislabel_scores(phi: jnp.ndarray, labels: jnp.ndarray, num_classes: int) -> jnp.ndarray:
+    """Score each train point's likelihood of being mislabeled.
+
+    Paper Fig. 5: a mislabeled point's interaction row patterns like the
+    OPPOSITE class. Score = (mean interaction with own-class points) -
+    (mean interaction with other-class points); correctly-labeled points
+    show strongly negative in-class interaction (redundancy), so HIGHER
+    scores (own-class interaction not below other-class) flag suspects.
+    We additionally subtract the main term phi_ii (mislabeled points have
+    low/zero likelihood contribution).
+    """
+    n = phi.shape[0]
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=phi.dtype)
+    off = phi - jnp.diag(jnp.diag(phi))
+    same = onehot @ onehot.T  # (n, n) 1 if same class
+    same = same - jnp.diag(jnp.diag(same))
+    other = (1.0 - onehot @ onehot.T) * (1.0 - jnp.eye(n, dtype=phi.dtype))
+    own_mean = jnp.sum(off * same, -1) / jnp.maximum(jnp.sum(same, -1), 1)
+    oth_mean = jnp.sum(off * other, -1) / jnp.maximum(jnp.sum(other, -1), 1)
+    return (own_mean - oth_mean) - jnp.diag(phi)
+
+
+def summarize_keep_order(values: jnp.ndarray) -> jnp.ndarray:
+    """Training-set summarization: indices ordered most-valuable first
+    (drop from the tail to shrink the set; paper Sec. 1 use case)."""
+    return jnp.argsort(-values, stable=True)
+
+
+def k_invariance_correlation(phi_a: jnp.ndarray, phi_b: jnp.ndarray) -> jnp.ndarray:
+    """Pearson correlation between two flattened interaction matrices
+    (paper Sec. 3.2: > 0.99 across k in [3, 20])."""
+    a = phi_a.reshape(-1)
+    b = phi_b.reshape(-1)
+    a = a - jnp.mean(a)
+    b = b - jnp.mean(b)
+    return jnp.sum(a * b) / jnp.sqrt(jnp.sum(a * a) * jnp.sum(b * b))

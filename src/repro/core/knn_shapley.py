@@ -1,0 +1,71 @@
+"""KNN-Shapley (Jia et al., 2019): exact single-point Shapley values in
+O(t n log n). This is the paper's primary baseline (its Sec. 1/3.2).
+
+Recurrence, per test point, with train points sorted closest-first
+(1-based position i, m(i) = 1[label match]):
+
+  s_{alpha_n} = m(n) / n * min(k, n) / k
+  s_{alpha_i} = s_{alpha_{i+1}} + (m(i) - m(i+1)) / k * min(k, i) / i
+
+As with STI-KNN we vectorize the recurrence as a reverse cumulative sum.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sti_knn import pairwise_sq_dists
+
+__all__ = ["knn_shapley_values", "knn_shapley_from_sorted"]
+
+
+def knn_shapley_from_sorted(match_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
+    """(..., n) bool/float label-match in sorted order -> (..., n) Shapley
+    values in SORTED coordinates."""
+    m = match_sorted.astype(jnp.float32)
+    n = m.shape[-1]
+    i1 = jnp.arange(1, n + 1, dtype=jnp.float32)  # 1-based position
+    last = m[..., -1:] * min(k, n) / (k * n)
+    # step[i] = (m(i) - m(i+1))/k * min(k,i)/i   for i = 1..n-1 (1-based)
+    diff = m[..., :-1] - m[..., 1:]
+    coef = jnp.minimum(float(k), i1[:-1]) / i1[:-1]
+    step = diff * coef / k
+    # s_i = last + sum_{j >= i} step[j]
+    suffix = jnp.flip(jnp.cumsum(jnp.flip(step, -1), -1), -1)
+    return jnp.concatenate([last + suffix, last], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "test_batch"))
+def knn_shapley_values(
+    x_train, y_train, x_test, y_test, k: int, *, test_batch: int = 512
+) -> jnp.ndarray:
+    """(n,) Shapley values of the KNN utility, averaged over the test set."""
+    n = x_train.shape[0]
+    t = x_test.shape[0]
+
+    def body(acc, batch):
+        xb, yb = batch
+        d2 = pairwise_sq_dists(xb, x_train)
+        order = jnp.argsort(d2, axis=-1, stable=True)
+        match = y_train[order] == yb[:, None]
+        s_sorted = knn_shapley_from_sorted(match, k)
+        # scatter back to original train ids
+        s = jnp.zeros((xb.shape[0], n), jnp.float32).at[
+            jnp.arange(xb.shape[0])[:, None], order
+        ].set(s_sorted)
+        return acc + jnp.sum(s, axis=0), None
+
+    tb = min(test_batch, t)
+    num = t // tb
+    acc = jnp.zeros((n,), jnp.float32)
+    if num:
+        xr = x_test[: num * tb].reshape(num, tb, -1)
+        yr = y_test[: num * tb].reshape(num, tb)
+        acc, _ = jax.lax.scan(body, acc, (xr, yr))
+    rem = t - num * tb
+    if rem:
+        acc, _ = body(acc, (x_test[num * tb :], y_test[num * tb :]))
+    return acc / t

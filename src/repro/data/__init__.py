@@ -1,0 +1,15 @@
+from repro.data.synthetic import (
+    make_circles,
+    make_moons,
+    make_gaussian_blobs,
+    make_token_batch,
+    flip_labels,
+)
+
+__all__ = [
+    "make_circles",
+    "make_moons",
+    "make_gaussian_blobs",
+    "make_token_batch",
+    "flip_labels",
+]

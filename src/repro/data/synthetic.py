@@ -1,0 +1,70 @@
+"""Synthetic datasets: the paper's evaluation geometries (Circle, Moon) plus
+Gaussian blobs, generated in-repo (no sklearn dependency), and synthetic
+token streams for the LM substrate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "make_circles",
+    "make_moons",
+    "make_gaussian_blobs",
+    "flip_labels",
+    "make_token_batch",
+]
+
+
+def make_circles(n_per_class: int, noise: float = 0.05, seed: int = 0):
+    """Two concentric circles (paper Sec. 4, Fig. 3). Returns (x, y)."""
+    rng = np.random.default_rng(seed)
+    theta = rng.uniform(0, 2 * np.pi, size=2 * n_per_class)
+    r = np.concatenate([np.full(n_per_class, 1.0), np.full(n_per_class, 0.5)])
+    x = np.stack([r * np.cos(theta), r * np.sin(theta)], -1)
+    x += rng.normal(scale=noise, size=x.shape)
+    y = np.concatenate([np.zeros(n_per_class), np.ones(n_per_class)]).astype(np.int32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def make_moons(n_per_class: int, noise: float = 0.05, seed: int = 0):
+    """Two interleaved half-moons (paper Appendix B)."""
+    rng = np.random.default_rng(seed)
+    t = rng.uniform(0, np.pi, size=n_per_class)
+    x0 = np.stack([np.cos(t), np.sin(t)], -1)
+    x1 = np.stack([1.0 - np.cos(t), 0.5 - np.sin(t)], -1)
+    x = np.concatenate([x0, x1], 0) + rng.normal(scale=noise, size=(2 * n_per_class, 2))
+    y = np.concatenate([np.zeros(n_per_class), np.ones(n_per_class)]).astype(np.int32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def make_gaussian_blobs(n_per_class: int, num_classes: int = 2, dim: int = 2,
+                        spread: float = 0.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(num_classes, dim)) * 2.0
+    x = np.concatenate(
+        [centers[c] + rng.normal(scale=spread, size=(n_per_class, dim))
+         for c in range(num_classes)], 0)
+    y = np.repeat(np.arange(num_classes), n_per_class).astype(np.int32)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y)
+
+
+def flip_labels(y: jnp.ndarray, frac: float, num_classes: int, seed: int = 0):
+    """Mislabel a fraction of points (paper Fig. 5). Returns (y_noisy, mask)."""
+    rng = np.random.default_rng(seed)
+    y_np = np.asarray(y)
+    n = y_np.shape[0]
+    idx = rng.choice(n, size=max(1, int(frac * n)), replace=False)
+    y_new = y_np.copy()
+    y_new[idx] = (y_np[idx] + rng.integers(1, num_classes, size=idx.shape[0])) % num_classes
+    mask = np.zeros(n, dtype=bool)
+    mask[idx] = True
+    return jnp.asarray(y_new), jnp.asarray(mask)
+
+
+def make_token_batch(key: jax.Array, batch: int, seq_len: int, vocab: int):
+    """Synthetic LM batch: (tokens, labels) = next-token shifted stream."""
+    toks = jax.random.randint(key, (batch, seq_len + 1), 0, vocab, dtype=jnp.int32)
+    return toks[:, :-1], toks[:, 1:]

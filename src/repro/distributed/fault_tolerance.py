@@ -1,0 +1,94 @@
+"""Fault-tolerance & elasticity runtime policies.
+
+On a real cluster the failure signal comes from the coordinator
+(jax.distributed heartbeats); here the machinery is driven by injectable
+hooks so it is fully testable single-host:
+
+  * StepGuard      -- deadline + retry around a train step (straggler
+                      mitigation: a step exceeding `deadline_s` is retried
+                      on refreshed data; persistent stragglers trigger a
+                      checkpoint-restore cycle).
+  * ElasticPlan    -- given a device set, picks the largest (data, model)
+                      mesh consistent with the TP degree and returns the
+                      re-sharding plan; combined with Checkpointer.restore
+                      (shardings=new) this is the elastic-restart path.
+  * HealthLog      -- per-step wall-time ring buffer; flags stragglers as
+                      steps > mean + k*std (used by the trainer loop).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+
+__all__ = ["StepGuard", "ElasticPlan", "HealthLog", "plan_mesh"]
+
+
+class HealthLog:
+    def __init__(self, window: int = 50, k_sigma: float = 3.0):
+        self.window = window
+        self.k = k_sigma
+        self.times: list[float] = []
+
+    def record(self, dt: float) -> bool:
+        """Record a step time; True if this step is a straggler outlier."""
+        hist = self.times[-self.window:]
+        self.times.append(dt)
+        if len(hist) < 8:
+            return False
+        mu, sd = float(np.mean(hist)), float(np.std(hist))
+        return dt > mu + self.k * max(sd, 0.05 * mu)
+
+
+@dataclass
+class StepGuard:
+    """Runs a step with deadline + bounded retries."""
+    deadline_s: float = float("inf")
+    max_retries: int = 2
+    on_retry: Optional[Callable[[int, Exception | str], None]] = None
+
+    def run(self, fn, *args):
+        err: Exception | str = ""
+        for attempt in range(self.max_retries + 1):
+            t0 = time.time()
+            try:
+                out = fn(*args)
+                jax.block_until_ready(out)
+                dt = time.time() - t0
+                if dt <= self.deadline_s:
+                    return out, dt
+                err = f"deadline exceeded ({dt:.1f}s > {self.deadline_s}s)"
+            except Exception as e:  # device failure surfaces here
+                err = e
+            if self.on_retry:
+                self.on_retry(attempt, err)
+        raise RuntimeError(f"step failed after {self.max_retries} retries: {err}")
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple
+    axis_names: tuple
+    lost_fraction: float
+
+
+def plan_mesh(n_devices: int, tp: int = 16, prefer_pods: int = 1) -> ElasticPlan:
+    """Largest (pod, data, model=tp) mesh fitting n_devices. Elastic
+    scale-down keeps TP fixed (weight layouts survive) and shrinks the
+    data axis -- restore() re-shards, the data pipeline re-balances by
+    step-deterministic assignment."""
+    if n_devices < tp:
+        raise ValueError(f"need >= {tp} devices for TP degree {tp}")
+    data = n_devices // tp
+    used = data * tp
+    if prefer_pods > 1 and data % prefer_pods == 0:
+        shape = (prefer_pods, data // prefer_pods, tp)
+        names = ("pod", "data", "model")
+    else:
+        shape = (data, tp)
+        names = ("data", "model")
+    return ElasticPlan(shape, names, 1.0 - used / n_devices)

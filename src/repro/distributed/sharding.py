@@ -1,0 +1,113 @@
+"""Sharding rules: logical-axis tables per strategy, batch/cache specs per
+input-shape kind, and helpers to build NamedShardings for whole pytrees.
+
+Strategies:
+  tp_dp  : weights replicated over data, TP over 'model' (small archs)
+  fsdp   : weight d_model dim additionally sharded over 'data' (ZeRO-3-ish;
+           XLA inserts all-gathers at use). Default for >= ~4B params.
+Batch dims always shard over ('pod','data') where present.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DEFAULT_RULES, FSDP_RULES, ModelConfig
+
+__all__ = ["rules_for", "strategy_for", "batch_spec", "cache_pytree_spec",
+           "named", "tree_named", "data_axes"]
+
+
+def data_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def rules_for(cfg: ModelConfig, strategy: str, mesh: Mesh) -> dict:
+    da = data_axes(mesh)
+    if strategy == "fsdp":
+        rules = dict(FSDP_RULES, embed=da)
+    else:
+        rules = dict(DEFAULT_RULES)
+    return rules
+
+
+def strategy_for(cfg: ModelConfig) -> str:
+    """FSDP for big models, plain TP+DP replication for small ones."""
+    big = cfg.d_model >= 3000 or cfg.num_experts >= 8
+    return "fsdp" if big else "tp_dp"
+
+
+def batch_spec(cfg: ModelConfig, kind: str, mesh: Mesh) -> dict:
+    """PartitionSpec per batch field."""
+    da = data_axes(mesh)
+    spec = {"tokens": P(da, None), "labels": P(da, None)}
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = P(da, None, None)
+    if cfg.family == "audio":
+        spec["frames"] = P(da, None, None)
+    if kind != "train":
+        spec.pop("labels")
+    return spec
+
+
+def cache_pytree_spec(cfg: ModelConfig, caches, shape_kind: str, mesh: Mesh,
+                      seq_len: int, *, cache_seq_shard: bool = True):
+    """PartitionSpec pytree matching init_caches().
+
+    Decode KV caches shard their SEQ dim over 'model' (flash-decode across
+    the TP shards: q is gathered -- tiny at decode -- the masked softmax
+    partials combine via the partitioner's max/sum collectives). Batch
+    shards over ('pod','data') when divisible; a global_batch of 1
+    (long_500k) puts the data axes on the seq dim too, so the 512k cache
+    spreads over all chips. SSM states shard their inner dim over 'model'
+    (matching the weight TP). `cache_seq_shard=False` reproduces the
+    replicated-seq baseline (see EXPERIMENTS.md §Perf decode iteration).
+    """
+    da = data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in da]))
+    batch = jax.tree.leaves(caches)[0].shape[1] if jax.tree.leaves(caches) else 0
+    b_ok = batch % dp == 0 and batch > 0
+    bspec = da if b_ok else None
+    if shape_kind == "decode" and cache_seq_shard:
+        s_ax = "model" if b_ok else (tuple(da) + ("model",))
+    else:
+        s_ax = None if b_ok else da  # legacy long-context data-sharding
+        if shape_kind != "decode":
+            s_ax = None
+
+    def leaf_spec(path, leaf):
+        keys = [str(getattr(p, "key", "")) for p in path]
+        in_kv = "kv" in keys or "xkv" in keys
+        is_x = "xkv" in keys
+        if in_kv:
+            if leaf.ndim == 5:  # k/v (g, b, kv, S, hd)
+                return P(None, bspec, None, None if is_x else s_ax, None)
+            return P(None, bspec, None if is_x else s_ax)
+        # "ssm" states
+        if leaf.ndim == 5:  # mlstm C (g, b, h, dk, dv): dv matches wv TP
+            return P(None, bspec, None, None, "model")
+        if leaf.ndim == 4:
+            if leaf.shape[-1] == cfg.ssm_state_dim:   # mamba ssm (g,b,di,ds)
+                return P(None, bspec, "model", None)
+            if leaf.shape[-1] == cfg.d_inner:          # mamba conv (g,b,c,di)
+                return P(None, bspec, None, "model")
+            return P(None, bspec, None, None)          # mlstm n (g,b,h,dk)
+        if leaf.ndim == 3:  # mlstm m (g,b,h) / slstm vecs (g,b,d)
+            return P(None, bspec, None)
+        return P(None, bspec) if leaf.ndim == 2 else P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, spec_tree_):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree_,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,12 @@
+from repro.kernels import ops, ref
+from repro.kernels.sti_fill import sti_fill_pallas
+from repro.kernels.distance import distance_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "sti_fill_pallas",
+    "distance_pallas",
+    "flash_attention_pallas",
+]

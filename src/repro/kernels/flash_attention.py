@@ -1,0 +1,123 @@
+"""Pallas TPU flash-attention (forward) with causal + sliding-window masks.
+
+Standard online-softmax tiling: grid (batch*heads, q_blocks, k_blocks) with
+the K dimension innermost; running max/denominator kept in VMEM next to the
+output tile. This is the TARGET-hardware kernel for prefill attention; the
+XLA path (repro.models.attention) is used for dry-run lowering on CPU and is
+the oracle in tests (kernels validated with interpret=True).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, block_q, block_k, n_kblocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (BQ, D)
+    k = k_ref[0]  # (BK, D)
+    v = v_ref[0]  # (BK, D)
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (BQ, BK)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    mask = jnp.ones_like(logits, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, -1))
+    p = jnp.exp(logits - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kblocks - 1)
+    def _done():
+        out_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """(b, h, s, d) x3 -> (b, h, s, d). K/V heads must already be repeated
+    to match Q heads (GQA expansion happens in the caller)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, h, s, d = q.shape
+    sk = k.shape[-2]
+    bq, bk = min(block_q, s), min(block_k, sk)
+    qp, kp = (-s) % bq, (-sk) % bk
+    qq = jnp.pad(q, ((0, 0), (0, 0), (0, qp), (0, 0))).reshape(b * h, s + qp, d)
+    kk = jnp.pad(k, ((0, 0), (0, 0), (0, kp), (0, 0))).reshape(b * h, sk + kp, d)
+    vv = jnp.pad(v, ((0, 0), (0, 0), (0, kp), (0, 0))).reshape(b * h, sk + kp, d)
+    S, SK = s + qp, sk + kp
+    n_kblocks = SK // bk
+    scale = 1.0 / (d ** 0.5)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            block_q=bq, block_k=bk, n_kblocks=n_kblocks,
+        ),
+        grid=(b * h, S // bq, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, S, d), q.dtype),
+        scratch_shapes=[
+            _vmem((bq,), jnp.float32),   # running max
+            _vmem((bq,), jnp.float32),   # running denominator
+            _vmem((bq, d), jnp.float32), # f32 accumulator
+        ],
+        interpret=interpret,
+    )(qq, kk, vv)
+    return out[:, :s].reshape(b, h, s, d)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

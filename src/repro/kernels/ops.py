@@ -1,0 +1,61 @@
+"""Jit'd public wrappers for the Pallas kernels with XLA fallbacks.
+
+On non-TPU backends the kernels execute in interpret mode (Python
+evaluation of the kernel body) -- used for correctness tests only. The
+`use_pallas` switch lets model/valuation code pick the XLA path for
+dry-run lowering (Pallas TPU kernels cannot be compiled by the CPU
+backend) while keeping the kernels as the target-hardware artifact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.sti_fill import sti_fill_pallas
+from repro.kernels.distance import distance_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.core.sti_knn import register_fill_fn
+
+__all__ = [
+    "sti_fill",
+    "pairwise_distance",
+    "flash_attention",
+    "pallas_supported",
+]
+
+
+def pallas_supported() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def sti_fill(g, ranks, *, use_pallas: bool | None = None, **kw):
+    if use_pallas is None:
+        use_pallas = pallas_supported()
+    if use_pallas:
+        return sti_fill_pallas(g, ranks, **kw)
+    return ref.sti_fill_ref(g, ranks)
+
+
+def pairwise_distance(x_test, x_train, *, use_pallas: bool | None = None, **kw):
+    if use_pallas is None:
+        use_pallas = pallas_supported()
+    if use_pallas:
+        return distance_pallas(x_test, x_train, **kw)
+    return ref.distance_ref(x_test, x_train)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    use_pallas: bool | None = None, **kw):
+    if use_pallas is None:
+        use_pallas = pallas_supported()
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window, **kw)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+# Make the Pallas fill selectable from the core streaming API:
+#   sti_knn_interactions(..., fill="pallas")
+register_fill_fn("pallas", lambda g, ranks: sti_fill_pallas(g, ranks))
+register_fill_fn("pallas_interpret", lambda g, ranks: sti_fill_pallas(g, ranks, interpret=True))

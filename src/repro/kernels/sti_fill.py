@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the STI-KNN t*n^2 accumulation (the hot loop).
+
+Computes  out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]
+without materializing the (t, n, n) intermediate.
+
+Grid layout: (t/TB, n/NB, n/NB) with the TEST dimension OUTERMOST: the
+(TB, n) g table block is fetched once per t-block and stays VMEM-resident
+across all output tiles (consecutive grid steps with an unchanged input
+block index are not re-copied), while each (NB, NB) output tile is
+read-modify-written once per t-block.
+
+HBM traffic ~= 2*(t/TB)*n*n_cols + t*n  (vs t*n^2 materialized by the XLA
+path, and vs (n*n_cols/NB^2)*t*n if t were innermost -- the g re-fetch
+would dominate at production sizes; see EXPERIMENTS.md §Perf cell 2).
+
+Per grid step the kernel holds in VMEM:
+  ranks_a (TB, NB) i32, ranks_b (TB, NB) i32, g (TB, n) f32, out (NB, NB) f32
+so the wrapper picks TB such that TB * n * 4B fits the VMEM budget.
+
+The inner gather g_p[max-outer] is a vector gather from a VMEM-resident
+table (Mosaic supports dynamic gathers via jnp.take); on the MXU-heavy
+alternative path (one-hot matmul) see EXPERIMENTS.md Sec. Perf -- the gather
+formulation wins on arithmetic intensity for n >= 1024.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sti_fill_pallas"]
+
+
+def _kernel(ra_ref, rb_ref, g_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ra = ra_ref[...]  # (TB, NB) i32
+    rb = rb_ref[...]  # (TB, NB) i32
+    g = g_ref[...]    # (TB, n) f32
+    tb = ra.shape[0]
+
+    def body(p, acc):
+        m = jnp.maximum(ra[p][:, None], rb[p][None, :])  # (NB, NB)
+        return acc + jnp.take(g[p], m, axis=0)
+
+    acc = jax.lax.fori_loop(
+        0, tb, body, jnp.zeros(out_ref.shape, jnp.float32)
+    )
+    out_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_t", "interpret")
+)
+def sti_fill_pallas(
+    g: jnp.ndarray,
+    ranks: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    block_t: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]  -> (n, n) f32."""
+    t, n = g.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if block_t is None:
+        # keep the (TB, n) g block under ~4 MiB of VMEM
+        block_t = max(1, min(t, (4 << 20) // max(4 * n, 1)))
+    bn = min(block_n, n)
+    bt = min(block_t, t)
+    # pad to multiples
+    n_pad = (-n) % bn
+    t_pad = (-t) % bt
+    if n_pad or t_pad:
+        # padded train points get rank >= n pointing at zero-padded g columns
+        g = jnp.pad(g, ((0, t_pad), (0, n_pad)))
+        pad_ranks = jnp.arange(n, n + n_pad, dtype=ranks.dtype)
+        ranks = jnp.pad(ranks, ((0, t_pad), (0, n_pad)))
+        if n_pad:
+            ranks = ranks.at[:, n:].set(pad_ranks[None, :])
+    tp, np_ = g.shape
+    grid = (tp // bt, np_ // bn, np_ // bn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, ia)),  # ranks_a
+            pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, jb)),  # ranks_b
+            pl.BlockSpec((bt, np_), lambda tt, ia, jb: (tt, 0)),  # g row block
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda tt, ia, jb: (ia, jb)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+        interpret=interpret,
+    )(ranks, ranks, g)
+    return out[:n, :n]

@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell with abstract inputs on 512 host-platform placeholder devices, then
+record memory / cost / collective analysis for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out experiments/dryrun
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.registry import ARCHS, PAPER_WORKLOAD, get_config
+from repro.configs.shapes import SHAPES, shapes_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SPEC
+from repro.launch.hlo_analysis import (
+    analyze_compiled, model_flops, sti_model_flops, collective_bytes)
+
+
+def _compile_lm(cfg, shape, mesh, strategy, grad_accum=1):
+    step, args, in_sh, out_sh = SPEC.lm_cell(cfg, shape, mesh,
+                                             strategy=strategy,
+                                             grad_accum=grad_accum)
+    to_named = lambda tree: jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
+        tree,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(step, in_shardings=to_named(in_sh),
+                          out_shardings=to_named(out_sh)).lower(*args)
+        return lowered.compile()
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             strategy: str | None = None, out_dir: str | None = None,
+             verbose: bool = True, grad_accum: int = 1,
+             remat: str | None = None, tag: str = "",
+             cfg_overrides: dict | None = None) -> dict:
+    """Compile one cell twice:
+      A) deployment-shaped (scanned layers)  -> memory_analysis
+      B) fully unrolled                      -> cost_analysis FLOPs +
+                                                collective bytes
+    XLA's cost analysis counts while-loop bodies once, and the unrolled
+    build inflates buffer lifetimes, so each compile answers the question
+    it is good at (EXPERIMENTS.md Sec. Methodology).
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    if arch == PAPER_WORKLOAD.name:
+        scfg = PAPER_WORKLOAD
+        step, args, _, _ = SPEC.sti_cell(scfg, mesh)
+        mflops = sti_model_flops(scfg)
+        with jax.set_mesh(mesh):
+            compiled_mem = jax.jit(step).lower(*args).compile()
+            # cost variant: small unrolled test chunk, scaled back up
+            # (the per-test scan body is otherwise costed once)
+            dp = n_chips // mesh.shape["model"]
+            small = scfg.__class__(**{**scfg.__dict__,
+                                      "test_chunk": 16 * dp})
+            step_s, args_s, _, _ = SPEC.sti_cell(small, mesh, unroll=True)
+            compiled_cost = jax.jit(step_s).lower(*args_s).compile()
+        cost_scale = scfg.test_chunk / small.test_chunk
+    else:
+        cfg = get_config(arch)
+        if remat:
+            cfg = cfg.replace(remat=remat)
+        if cfg_overrides:
+            cfg = cfg.replace(**cfg_overrides)
+        shape = SHAPES[shape_name]
+        mflops = model_flops(cfg, shape)
+        compiled_mem = _compile_lm(cfg, shape, mesh, strategy,
+                                   grad_accum=grad_accum)
+        kvb = 4096 if shape.seq_len >= 32768 else 1024
+        # cost compile at accum=1 (FLOPs are accumulation-invariant; the
+        # microbatch scan would otherwise be costed once)
+        compiled_cost = _compile_lm(
+            cfg.replace(scan_unroll=True, kv_block=kvb), shape, mesh,
+            strategy)
+        cost_scale = 1.0
+    t_compile = time.time() - t0
+
+    mem = compiled_mem.memory_analysis()
+    hlo = compiled_cost.as_text()
+    terms = analyze_compiled(compiled_cost, n_chips, mflops, hlo_text=hlo,
+                             flop_scale=cost_scale)
+    coll = collective_bytes(hlo)
+    mem_rec = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    terms.peak_memory_per_chip = float(
+        (mem_rec["temp_bytes"] or 0) + (mem_rec["argument_bytes"] or 0)
+        + (mem_rec["output_bytes"] or 0) - (mem_rec["alias_bytes"] or 0))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "strategy": strategy or "auto",
+        "grad_accum": grad_accum,
+        "remat": remat or "default",
+        "tag": tag,
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_rec,
+        "collectives": coll,
+        "roofline": terms.asdict(),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} x {rec['mesh']} "
+              f"(compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {rec['memory_analysis']}")
+        ca = compiled_cost.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print(f"  cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}")
+        print(f"  collectives: {coll}")
+        r = rec["roofline"]
+        print(f"  roofline: compute={r['t_compute']:.4f}s "
+              f"memory={r['t_memory']:.4f}s collective={r['t_collective']:.4f}s"
+              f" -> {r['bottleneck']} | useful={r['useful_ratio']:.3f}")
+    if out_dir:
+        p = Path(out_dir)
+        p.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        fn = p / (f"{arch}__{shape_name}__"
+                  f"{rec['mesh'].replace('x', '-')}{suffix}.json")
+        fn.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def all_cells():
+    for arch in ARCHS:
+        for shape in shapes_for(arch):
+            yield arch, shape.name
+    yield PAPER_WORKLOAD.name, "valuation_step"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--strategy", default=None, choices=[None, "fsdp", "tp_dp"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-going", action="store_true")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient accumulation for train cells")
+    ap.add_argument("--remat", default=None, choices=[None, "block", "dots", "none"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for output JSONs (perf-iteration variants)")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                run_cell(arch, shape, mp, strategy=args.strategy,
+                         out_dir=args.out, grad_accum=args.accum,
+                         remat=args.remat, tag=args.tag)
+            except Exception as e:
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"FAILED {arch} x {shape} multi_pod={mp}: {e}")
+                if not args.keep_going:
+                    traceback.print_exc()
+                    raise SystemExit(1)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+memory term     = HLO_bytes / (chips * HBM_bw)
+collective term = collective_bytes / (chips * link_bw)
+
+FLOPs/bytes come from compiled.cost_analysis(); collective bytes are parsed
+from the optimized HLO text (result-shape of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, weighted per DESIGN notes:
+result shape ~ bytes moved per chip for ring algorithms up to the 2(p-1)/p
+factor, which we fold into the ~linkbw constant).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+__all__ = ["RooflineTerms", "analyze_compiled", "collective_bytes",
+           "HW", "model_flops"]
+
+# TPU v5e per chip
+HW = {
+    "peak_flops_bf16": 197e12,
+    "hbm_bw": 819e9,
+    "link_bw": 50e9,  # per-link ICI, one direction
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>.*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind byte totals from result shapes (skip -done duplicates)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group('op')}-done(" in line:
+            continue  # counted at -start
+        kind = m.group("op")
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group("out"))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    peak_memory_per_chip: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def asdict(self):
+        return asdict(self)
+
+
+def analyze_compiled(compiled, n_chips: int, model_flops_: float = 0.0,
+                     hlo_text: str | None = None,
+                     flop_scale: float = 1.0) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * flop_scale
+    byts = float(cost.get("bytes accessed", 0.0)) * flop_scale
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)["total"]
+    # cost_analysis is per-program = per-chip under SPMD
+    t_c = flops / HW["peak_flops_bf16"]
+    t_m = byts / HW["hbm_bw"]
+    t_l = coll / HW["link_bw"]
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    bottleneck = max(terms, key=terms.get)
+    mem = compiled.memory_analysis()
+    peak = float(
+        getattr(mem, "temp_size_in_bytes", 0)
+        + getattr(mem, "argument_size_in_bytes", 0)
+        + getattr(mem, "output_size_in_bytes", 0)
+        - getattr(mem, "alias_size_in_bytes", 0))
+    useful = (model_flops_ / (flops * n_chips)) if flops else 0.0
+    return RooflineTerms(
+        flops_per_chip=flops, bytes_per_chip=byts, coll_bytes_per_chip=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_l, bottleneck=bottleneck,
+        peak_memory_per_chip=peak, model_flops=model_flops_,
+        useful_ratio=useful)
+
+
+def sti_model_flops(scfg) -> float:
+    """Useful work of one STI-KNN valuation step (global):
+    distance GEMM (2 t n d) + rank/g (~t n log n, negligible) + fill
+    (t * n^2 gather-max-add, counted as 3 ops)."""
+    t, n, d = scfg.test_chunk, scfg.n_train, scfg.feat_dim
+    return float(2 * t * n * d + 3 * t * n * n)
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D forward-only.
+    N counts ACTIVE params (MoE: top-k experts only); D = tokens."""
+    from repro.models import build_model
+    import jax
+
+    model = build_model(cfg)
+    total = 0
+    leaves = jax.tree.leaves(
+        model.desc(), is_leaf=lambda x: hasattr(x, "axes"))
+    for pd in leaves:
+        n = 1
+        for s in pd.shape:
+            n *= s
+        if "expert" in pd.axes:  # scale expert params by topk/E
+            n = n * cfg.experts_per_token // max(cfg.num_experts, 1)
+        total += n
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * total * tokens)

@@ -1,0 +1,100 @@
+"""Training launcher.
+
+Local end-to-end run (CPU, reduced dims):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --reduced --steps 50 --batch 8 --seq 128
+
+Production pod run (on a real TPU slice this is the same command; the
+mesh comes from the device set):
+  python -m repro.launch.train --arch mixtral-8x7b --steps 10000 \
+      --batch 256 --seq 4096 --ckpt-dir gs://.../ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.configs.base import ModelConfig
+from repro.data import make_token_batch
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.training.trainer import Trainer, TrainerConfig
+from repro.training.optimizer import AdamWConfig
+
+
+def reduced_config(cfg: ModelConfig, target_params: float = 100e6) -> ModelConfig:
+    """~100M-param member of the same family for the example driver."""
+    kw = dict(d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+              vocab_size=min(cfg.vocab_size, 32000), tp_pad_heads=1,
+              dtype=jnp.float32, mlstm_chunk=32, mamba_chunk=32,
+              moe_group_size=512)
+    kw["num_layers"] = cfg.group_size * max(2, 16 // cfg.group_size)
+    kw["d_ff"] = 0 if cfg.d_ff == 0 else 1536
+    if cfg.num_experts:
+        kw["num_experts"] = 4
+    if cfg.family == "audio":
+        kw["encoder_layers"] = 4
+        kw["encoder_seq"] = 128
+    if cfg.family == "vlm":
+        kw["num_patches"] = 16
+    if cfg.sliding_window:
+        kw["sliding_window"] = 512
+    return cfg.replace(**kw)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="shrink to ~100M params for a local run")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 16x16 pod mesh (needs 256 devices)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+    tcfg = TrainerConfig(
+        steps=args.steps, grad_accum=args.grad_accum,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        opt=AdamWConfig(lr=args.lr, warmup_steps=max(10, args.steps // 20),
+                        total_steps=args.steps),
+    )
+    tr = Trainer(cfg, tcfg, mesh)
+    params, opt_state = tr.init_state(seed=0)
+    params, opt_state, start = tr.maybe_restore(params, opt_state)
+
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={dict(mesh.shape)}")
+
+    def batch_fn(step):
+        toks, labels = make_token_batch(
+            jax.random.key(step), args.batch, args.seq, cfg.vocab_size)
+        batch = {"tokens": toks, "labels": labels}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.random.normal(
+                jax.random.key(step + 1), (args.batch, cfg.num_patches,
+                                           cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                jax.random.key(step + 2), (args.batch, cfg.encoder_seq,
+                                           cfg.d_model), cfg.dtype)
+        return batch
+
+    tr.fit(params, opt_state, batch_fn, start_step=start)
+
+
+if __name__ == "__main__":
+    main()

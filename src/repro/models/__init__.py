@@ -1,0 +1,5 @@
+from repro.models.model import Model, build_model
+from repro.models import layers, attention, moe, ssm, transformer, whisper
+
+__all__ = ["Model", "build_model", "layers", "attention", "moe", "ssm",
+           "transformer", "whisper"]

@@ -1,0 +1,229 @@
+"""GQA attention: full/causal/sliding-window, blockwise (flash-style) XLA
+path, KV-cache decode (linear + ring-buffer), cross-attention.
+
+Head-count padding: q heads are padded up to a multiple of the TP degree
+(cfg.padded_heads); padded heads have zero rows in wo so the math is exact
+(the waste shows up in the roofline's MODEL_FLOPS/HLO ratio, by design).
+K/V stay at the true head count, replicated across model shards, and are
+expanded per-shard with a static gather map that works for ANY (H, KV).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+from repro.models.layers import rope
+
+__all__ = ["attn_desc", "attention", "decode_attention", "KVCache",
+           "kv_head_map"]
+
+_NEG = -1e30
+
+
+class KVCache(NamedTuple):
+    """k/v: (b, KV, S, hd). pos: (b, S) absolute positions (ring buffers
+    need them; linear caches use arange)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def attn_desc(cfg: ModelConfig, cross: bool = False):
+    hp, kv, hd = cfg.padded_heads, cfg.num_kv_heads, cfg.hd
+    d = {
+        "wq": PD((cfg.d_model, hp * hd), ("embed", "heads")),
+        "wk": PD((cfg.d_model, kv * hd), ("embed", "kv")),
+        "wv": PD((cfg.d_model, kv * hd), ("embed", "kv")),
+        "wo": PD((hp * hd, cfg.d_model), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = PD((hp * hd,), ("heads",), init="zeros")
+        d["bk"] = PD((kv * hd,), ("kv",), init="zeros")
+        d["bv"] = PD((kv * hd,), ("kv",), init="zeros")
+    if cfg.qk_norm:
+        d["q_norm"] = PD((hd,), (None,), init="ones")
+        d["k_norm"] = PD((hd,), (None,), init="ones")
+    return d
+
+
+def kv_head_map(cfg: ModelConfig) -> jnp.ndarray:
+    """Static map padded-q-head -> kv head. True heads map in contiguous
+    groups; padded heads (zeroed by wo) map to head 0."""
+    h, kv, hp = cfg.num_heads, cfg.num_kv_heads, cfg.padded_heads
+    m = [min(i * kv // h, kv - 1) if i < h else 0 for i in range(hp)]
+    return jnp.asarray(m, jnp.int32)
+
+
+def _rms(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    out = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _project_q(p, x, cfg, positions, use_rope):
+    b, s, _ = x.shape
+    hp, hd = cfg.padded_heads, cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, s, hp, hd)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    return q
+
+
+def _project_kv(p, x, cfg, positions, use_rope):
+    b, s, _ = x.shape
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        k = _rms(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def _blockwise_attn(q, k, v, q_pos, k_pos, *, causal, window, kv_block,
+                    unroll=False):
+    """Flash-style attention in pure XLA: scan over KV blocks with running
+    max/denominator. q: (b, hp, s, hd); k, v: (b, hp, skv, hd).
+    Positions drive masking so ring buffers / offsets work uniformly."""
+    b, hp, s, hd = q.shape
+    skv = k.shape[2]
+    blk = min(kv_block, skv)
+    nblk = -(-skv // blk)
+    pad = nblk * blk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+    scale = 1.0 / (hd ** 0.5)
+    kb = k.reshape(b, hp, nblk, blk, hd).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hp, nblk, blk, hd).transpose(2, 0, 1, 3, 4)
+    pb = k_pos.reshape(b, nblk, blk).transpose(1, 0, 2)
+
+    def body(carry, blk_in):
+        m, l, acc = carry
+        kc, vc, pc = blk_in
+        logits = jnp.einsum(
+            "bhqd,bhkd->bhqk", q.astype(jnp.float32), kc.astype(jnp.float32)
+        ) * scale
+        mask = pc[:, None, None, :] <= q_pos[:, None, :, None] if causal else (
+            pc[:, None, None, :] < 2**30)
+        if window is not None:
+            mask &= pc[:, None, None, :] > q_pos[:, None, :, None] - window
+        logits = jnp.where(mask, logits, _NEG)
+        m_new = jnp.maximum(m, jnp.max(logits, -1))
+        alpha = jnp.exp(m - m_new)
+        # zero masked entries explicitly: exp(-NEG - -NEG) == 1 otherwise
+        pexp = jnp.where(mask, jnp.exp(logits - m_new[..., None]), 0.0)
+        l_new = l * alpha + jnp.sum(pexp, -1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", pexp, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, hp, s), _NEG, jnp.float32),
+        jnp.zeros((b, hp, s), jnp.float32),
+        jnp.zeros((b, hp, s, hd), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, pb),
+                                  unroll=nblk if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, *, positions=None, causal=True,
+              window=None, kv_block=1024, return_cache=False,
+              xattn_kv=None, use_rope=True):
+    """Full (train/prefill) attention. x: (b, s, d_model).
+
+    xattn_kv: (b, s_enc, d_model) encoder output for cross-attention (then
+    causal/window are ignored and kv positions are the encoder arange).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q = _project_q(p, x, cfg, positions, use_rope)
+    if xattn_kv is None:
+        k, v = _project_kv(p, x, cfg, positions, use_rope)
+        k_pos = positions
+    else:
+        s_enc = xattn_kv.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+        k, v = _project_kv(p, xattn_kv, cfg, enc_pos, use_rope)
+        k_pos = enc_pos
+        causal = False
+    hmap = kv_head_map(cfg)
+    kx = k[:, :, hmap, :].transpose(0, 2, 1, 3)  # (b, hp, s_kv, hd)
+    vx = v[:, :, hmap, :].transpose(0, 2, 1, 3)
+    qx = q.transpose(0, 2, 1, 3)
+    out = _blockwise_attn(
+        qx, kx, vx, positions, k_pos, causal=causal, window=window,
+        kv_block=kv_block, unroll=cfg.scan_unroll,
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    y = out @ p["wo"].astype(x.dtype)
+    if return_cache:
+        cache = KVCache(k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3), k_pos)
+        return y, cache
+    return y
+
+
+def decode_attention(p, x, cfg: ModelConfig, cache: KVCache, index,
+                     *, window=None, use_rope=True, xattn=False):
+    """One-token decode. x: (b, 1, d_model); cache k/v: (b, KV, S, hd).
+
+    Linear cache: writes at `index`. Ring buffer (window is not None and
+    S == window): writes at index % S with absolute positions tracked in
+    cache.pos. Cross-attention (xattn=True): cache holds encoder k/v and is
+    not written.
+    """
+    b = x.shape[0]
+    pos_now = jnp.full((b, 1), index, jnp.int32)
+    q = _project_q(p, x, cfg, pos_now, use_rope)  # (b, 1, hp, hd)
+    if not xattn:
+        k_new, v_new = _project_kv(p, x, cfg, pos_now, use_rope)
+        S = cache.k.shape[2]
+        slot = index % S if window is not None and S == window else index
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k_new.transpose(0, 2, 1, 3).astype(cache.k.dtype),
+            (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v_new.transpose(0, 2, 1, 3).astype(cache.v.dtype),
+            (0, 0, slot, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache.pos, pos_now.astype(cache.pos.dtype), (0, slot))
+        cache = KVCache(ck, cv, cpos)
+    hmap = kv_head_map(cfg)
+    kx = cache.k[:, hmap]  # (b, hp, S, hd)
+    vx = cache.v[:, hmap]
+    scale = 1.0 / (cfg.hd ** 0.5)
+    logits = jnp.einsum(
+        "bqhd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * scale  # (b, hp, 1, S)
+    if xattn:
+        # encoder positions are all visible; mask only empty slots
+        valid = cache.pos[:, None, None, :] < 2**30
+    else:
+        valid = cache.pos[:, None, None, :] <= index
+        if window is not None:
+            valid &= cache.pos[:, None, None, :] > index - window
+    logits = jnp.where(valid, logits, _NEG)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bqhd", w, vx.astype(jnp.float32))
+    y = out.reshape(b, 1, -1).astype(x.dtype) @ p["wo"].astype(x.dtype)
+    return y, cache

@@ -1,0 +1,109 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings (pure JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+
+__all__ = [
+    "norm_desc", "apply_norm", "rope", "mlp_desc", "apply_mlp",
+    "embedding_desc", "embed_tokens", "logits_from_hidden", "cross_entropy",
+]
+
+
+# ------------------------------------------------------------------- norms
+def norm_desc(cfg: ModelConfig, kind: str | None = None):
+    kind = kind or cfg.norm_kind
+    d = {"scale": PD((cfg.d_model,), ("embed",), init="ones")}
+    if kind == "layernorm":
+        d["bias"] = PD((cfg.d_model,), ("embed",), init="zeros")
+    return d
+
+
+def apply_norm(p, x, cfg: ModelConfig, kind: str | None = None):
+    kind = kind or cfg.norm_kind
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., s, h, hd), positions: (..., s)."""
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., s, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- mlp
+def mlp_desc(cfg: ModelConfig, d_ff: int | None = None, axes=("embed", "mlp")):
+    f = d_ff or cfg.d_ff
+    a_in, a_out = axes
+    d = {
+        "w1": PD((cfg.d_model, f), (a_in, a_out)),
+        "w2": PD((f, cfg.d_model), (a_out, a_in)),
+    }
+    if cfg.act == "silu":  # gated (SwiGLU)
+        d["w3"] = PD((cfg.d_model, f), (a_in, a_out))
+    return d
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    h = x @ p["w1"].astype(x.dtype)
+    if cfg.act == "silu":
+        h = jax.nn.silu(h) * (x @ p["w3"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"].astype(x.dtype)
+
+
+# --------------------------------------------------------------- embeddings
+def embedding_desc(cfg: ModelConfig):
+    d = {"tok": PD((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        d["out"] = PD((cfg.d_model, cfg.padded_vocab), ("embed", "vocab"))
+    return d
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    return p["tok"][tokens].astype(cfg.dtype)
+
+
+def logits_from_hidden(p, x, cfg: ModelConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    if cfg.logits_f32:
+        logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    else:
+        # bf16 operands, f32 accumulation (MaxText-style): halves the
+        # vocab-matmul HBM traffic at negligible loss-precision cost
+        logits = jnp.einsum(
+            "...d,dv->...v", x.astype(cfg.dtype), w.astype(cfg.dtype),
+            preferred_element_type=jnp.float32)
+    # mask padded vocab columns so they never receive probability mass
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab_size,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

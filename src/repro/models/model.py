@@ -1,0 +1,111 @@
+"""Model factory: one uniform train/prefill/decode/embed API per config.
+
+Batch conventions (labels[i] = next token at position i):
+  dense/moe/ssm/hybrid : {"tokens": (B,S) i32, "labels": (B,S) i32}
+  vlm    : + {"patch_embeds": (B,P,D)}; loss on the text segment only
+  audio  : {"frames": (B,E,D), "tokens": (B,S) i32, "labels": (B,S) i32}
+Decode : {"tokens": (B,1), "caches": pytree, "index": scalar i32}
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ModelConfig, init_params, abstract_params, spec_tree,
+)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+__all__ = ["Model", "build_model"]
+
+AUX_COEF = 0.01  # MoE load-balance loss weight
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def desc(self):
+        if self.cfg.family == "audio":
+            return W.whisper_desc(self.cfg)
+        return T.model_desc(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.desc(), key, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.desc(), dtype)
+
+    def param_spec(self, rules):
+        return spec_tree(self.desc(), rules)
+
+    # ------------------------------------------------------------ forward
+    def _fwd(self, params, batch, mode, caches=None, index=None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return W.whisper_forward(
+                params, cfg, batch["tokens"], batch.get("frames"),
+                mode=mode, caches=caches, index=index)
+        extra = batch.get("patch_embeds")
+        return T.forward(params, cfg, batch["tokens"], mode=mode,
+                         caches=caches, index=index, extra_embeds=extra,
+                         kv_block=cfg.kv_block)
+
+    def loss_fn(self, params, batch):
+        logits, _, _, aux = self._fwd(params, batch, "train")
+        if self.cfg.family == "vlm":
+            p = batch["patch_embeds"].shape[1]
+            logits = logits[:, p:, :]
+        loss = L.cross_entropy(logits, batch["labels"])
+        return loss + AUX_COEF * aux, {"ce": loss, "aux": aux}
+
+    def prefill(self, params, batch):
+        logits, _, caches, _ = self._fwd(params, batch, "prefill")
+        return logits[:, -1:], caches
+
+    def decode_step(self, params, batch):
+        logits, _, caches, _ = self._fwd(
+            params, batch, "decode", caches=batch["caches"],
+            index=batch["index"])
+        return logits, caches
+
+    def embed(self, params, batch):
+        """Pooled features for STI-KNN valuation (paper's extractor role)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return jnp.mean(
+                W.encode(params, cfg, batch["frames"]).astype(jnp.float32), 1)
+        extra = batch.get("patch_embeds")
+        _, hidden, _, _ = T.forward(params, cfg, batch["tokens"],
+                                    mode="train", extra_embeds=extra)
+        return jnp.mean(hidden.astype(jnp.float32), axis=1)
+
+    # ------------------------------------------------------------- caches
+    def init_caches(self, batch_size: int, max_len: int, dtype=None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return T.init_caches(cfg, batch_size, max_len,
+                                 enc_len=cfg.encoder_seq, dtype=dtype)
+        return T.init_caches(cfg, batch_size, max_len, dtype=dtype)
+
+    def num_params(self) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(
+            self.desc(), is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes")
+        ):
+            n = 1
+            for s in leaf.shape:
+                n *= s
+            total += n
+        return total
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

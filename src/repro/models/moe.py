@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded scatter dispatch.
+
+TPU adaptation (DESIGN.md Sec. 3 + EXPERIMENTS.md Perf log): the textbook
+GShard dispatch/combine one-hot einsum materializes a
+(groups, group_size, E, capacity) tensor = tokens * group_size * topk * cf
+elements -- ~21 TB for mixtral @ train_4k. We instead dispatch by
+SCATTER-ADD into per-expert capacity buffers and combine by GATHER:
+
+  pos[t,j]   = position of (token t, choice j) in expert queue  (cumsum of
+               a (s*topk, E) one-hot -- small)
+  slot[t,j]  = expert * cap + pos          (dropped iff pos >= cap)
+  expert_in  = zeros(E*cap, d).at[slot].add(keep * x[t])
+  h          = per-expert FFN on (E, cap, d)  -- dense MXU einsums
+  y[t]       = sum_j gate[t,j] * expert_out[slot[t,j]]
+
+Peak transient is E*cap*d per group (~MBs), not tokens*s*topk*cf.
+Experts' hidden dim is TP-sharded over 'model' (robust for any E vs mesh);
+tokens (group dim) shard over the data axes. Overflow tokens drop
+(standard GShard semantics; residual stream carries them).
+
+Returns the Switch-style load-balancing aux loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+
+__all__ = ["moe_desc", "apply_moe"]
+
+
+def moe_desc(cfg: ModelConfig):
+    f = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    return {
+        "router": PD((cfg.d_model, e), ("embed", None), scale=0.02),
+        "w1": PD((e, cfg.d_model, f), ("expert", "embed", "expert_mlp")),
+        "w2": PD((e, f, cfg.d_model), ("expert", "expert_mlp", "embed")),
+        "w3": PD((e, cfg.d_model, f), ("expert", "embed", "expert_mlp")),
+    }
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (b, s, d) -> (out (b, s, d), aux_loss scalar).
+
+    With cfg.shmap_axes set, runs under shard_map: tokens stay local to
+    their (pod, data) shard, expert FFNs are TP-sharded on the hidden dim,
+    and the single collective is the psum of the combined output over
+    'model' (plus a pmean of the aux loss)."""
+    if cfg.shmap_axes:
+        from jax.sharding import PartitionSpec as P
+        da, mp = cfg.shmap_axes
+        da = tuple(da)
+        # decode-time batches (e.g. global_batch 1) may not divide the data
+        # axes: replicate tokens across data then (token count is tiny)
+        mesh = jax.sharding.get_abstract_mesh()
+        dp = 1
+        for a in da:
+            dp *= mesh.shape[a]
+        if x.shape[0] % dp:
+            da = ()
+
+        def inner(xl, router, w1, w2, w3):
+            pl = {"router": router, "w1": w1, "w2": w2, "w3": w3}
+            out, aux = _moe_math(pl, xl, cfg)
+            out = jax.lax.psum(out, mp)
+            aux = jax.lax.pmean(aux, da + (mp,))
+            return out, aux
+
+        return jax.shard_map(
+            inner,
+            in_specs=(P(da, None, None), P(None, None),
+                      P(None, None, mp), P(None, mp, None),
+                      P(None, None, mp)),
+            out_specs=(P(da, None, None), P()),
+            check_vma=False,
+        )(x, p["router"], p["w1"], p["w2"], p["w3"])
+    return _moe_math(p, x, cfg)
+
+
+def _moe_math(p, x, cfg: ModelConfig):
+    b, s, d = x.shape
+    e = cfg.num_experts
+    topk = cfg.experts_per_token
+    n_tok = b * s
+    gs = min(cfg.moe_group_size, n_tok)
+    n_grp = -(-n_tok // gs)
+    pad = n_grp * gs - n_tok
+    tokens = x.reshape(n_tok, d)
+    if pad:
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    xg = tokens.reshape(n_grp, gs, d)
+
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)  # (g, s, e)
+    gate_vals, gate_idx = jax.lax.top_k(probs, topk)  # (g, s, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    cap = int(gs * topk * cfg.capacity_factor / e) + 1
+    flat_idx = gate_idx.reshape(n_grp, gs * topk)  # (g, sk)
+    sel = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # (g, sk, e) small
+    pos = jnp.cumsum(sel, axis=1) - 1  # position in expert queue
+    pos = jnp.sum(pos * sel, axis=-1)  # (g, sk)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.clip(flat_idx * cap + jnp.clip(pos, 0, cap - 1),
+                    0, e * cap - 1)  # (g, sk)
+
+    cdtype = cfg.dtype
+    # scatter-dispatch: (g, E*cap, d)
+    tok_rep = jnp.repeat(xg.astype(cdtype), topk, axis=1)  # (g, sk, d)
+    expert_in = jnp.zeros((n_grp, e * cap, d), cdtype)
+    gidx = jnp.arange(n_grp)[:, None]
+    expert_in = expert_in.at[gidx, slot].add(tok_rep * keep[..., None])
+    expert_in = expert_in.reshape(n_grp, e, cap, d)
+
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w1"].astype(cdtype))
+    h = jax.nn.silu(h) * jnp.einsum(
+        "gecd,edf->gecf", expert_in, p["w3"].astype(cdtype))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(cdtype))
+    expert_out = expert_out.reshape(n_grp, e * cap, d)
+
+    # gather-combine
+    y = expert_out[gidx, slot]  # (g, sk, d)
+    w = (gate_vals.reshape(n_grp, gs * topk).astype(cdtype) * keep)
+    y = (y * w[..., None]).reshape(n_grp, gs, topk, d).sum(axis=2)
+
+    out = y.reshape(n_grp * gs, d)[:n_tok].reshape(b, s, d)
+    # Switch load-balance aux: e * sum_e(frac_top1_tokens_e * mean_prob_e)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac = jnp.mean(top1, axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,347 @@
+"""State-space / recurrent blocks: Mamba (Jamba) and mLSTM/sLSTM (xLSTM).
+
+TPU adaptation notes (DESIGN.md Sec. 3):
+  * Mamba trains with a CHUNKED selective scan: sequential lax.scan over
+    chunks, parallel associative scan inside a chunk; the inner dim is TP
+    sharded over 'model' so per-chip transients stay in the ~100 MB range.
+  * mLSTM is implemented as gated linear attention with matrix memory
+    (chunkwise: intra-chunk decay-masked attention + inter-chunk recurrent
+    state), the TPU-native equivalent of the paper's recurrent form.
+  * sLSTM is inherently sequential (scalar memory w/ exponential gating);
+    it runs as a lax.scan over time with small replicated recurrent
+    weights -- see the roofline discussion for its latency behaviour.
+
+Decode paths carry O(1) state per layer: Mamba (conv window, ssm state),
+mLSTM (C, n, m), sLSTM (h, c, n, m).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+
+__all__ = [
+    "mamba_desc", "mamba_forward", "mamba_decode_step", "mamba_init_state",
+    "MambaState",
+    "mlstm_desc", "mlstm_forward", "mlstm_decode_step", "mlstm_init_state",
+    "MLSTMState",
+    "slstm_desc", "slstm_forward", "slstm_decode_step", "slstm_init_state",
+    "SLSTMState",
+]
+
+
+# =====================================================================
+# Mamba (S6)
+# =====================================================================
+class MambaState(NamedTuple):
+    conv: jnp.ndarray  # (b, dconv-1, di) recent inputs for the causal conv
+    ssm: jnp.ndarray   # (b, di, dstate) f32
+
+
+def mamba_desc(cfg: ModelConfig):
+    di, ds, dc, dr = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_dim, cfg.dt_rank_
+    return {
+        "in_proj": PD((cfg.d_model, 2 * di), ("embed", "inner")),
+        "conv_w": PD((dc, di), ("conv", "inner"), scale=0.5),
+        "conv_b": PD((di,), ("inner",), init="zeros"),
+        "x_proj": PD((di, dr + 2 * ds), ("inner", None)),
+        "dt_proj": PD((dr, di), (None, "inner")),
+        "dt_bias": PD((di,), ("inner",), init="zeros"),
+        "A_log": PD((di, ds), ("inner", "state"), init="ones"),
+        "D": PD((di,), ("inner",), init="ones"),
+        "out_proj": PD((di, cfg.d_model), ("inner", "embed")),
+    }
+
+
+def _mamba_scan_chunk(hs_in, dA, dBx):
+    """Associative scan within a chunk. dA, dBx: (b, c, di, ds) f32.
+    h_t = dA_t * h_{t-1} + dBx_t ; returns (h_all, h_last)."""
+
+    def op(a, b):
+        return (a[0] * b[0], b[0] * a[1] + b[1])
+
+    a_all, b_all = jax.lax.associative_scan(op, (dA, dBx), axis=1)
+    h_all = a_all * hs_in[:, None] + b_all
+    return h_all, h_all[:, -1]
+
+
+def _mamba_inner(p, xz, cfg: ModelConfig, state: MambaState | None):
+    """xz: (b, s, 2*di) pre-projected input. Returns (y (b, s, di), state)."""
+    b, s, _ = xz.shape
+    di, ds, dc = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_conv_dim
+    x, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv over time (window dc)
+    if state is None:
+        hist = jnp.zeros((b, dc - 1, di), x.dtype)
+    else:
+        hist = state.conv.astype(x.dtype)
+    xc = jnp.concatenate([hist, x], axis=1)
+    conv_hist = xc[:, -(dc - 1):, :] if dc > 1 else jnp.zeros((b, 0, di), x.dtype)
+    w = p["conv_w"].astype(x.dtype)  # (dc, di)
+    xconv = sum(xc[:, i : i + s, :] * w[i] for i in range(dc))
+    xconv = jax.nn.silu(xconv + p["conv_b"].astype(x.dtype))
+
+    proj = xconv @ p["x_proj"].astype(x.dtype)  # (b, s, dr+2ds)
+    dr = cfg.dt_rank_
+    dt, B, C = proj[..., :dr], proj[..., dr : dr + ds], proj[..., dr + ds :]
+    dt = jax.nn.softplus(
+        dt @ p["dt_proj"].astype(x.dtype) + p["dt_bias"].astype(x.dtype)
+    ).astype(jnp.float32)  # (b, s, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ds)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (b, s, di, ds)
+    dBx = (dt * xconv.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    h0 = jnp.zeros((b, di, ds), jnp.float32) if state is None else state.ssm
+    chunk = min(cfg.mamba_chunk, s)
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        dBx = jnp.pad(dBx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dA_c = dA.reshape(b, nchunk, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    dBx_c = dBx.reshape(b, nchunk, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+
+    def chunk_body(h, blk):
+        da, dbx = blk
+        h_all, h_last = _mamba_scan_chunk(h, da, dbx)
+        return h_last, h_all
+
+    h_last, h_alls = jax.lax.scan(chunk_body, h0, (dA_c, dBx_c))
+    h_all = h_alls.transpose(1, 0, 2, 3, 4).reshape(b, nchunk * chunk, di, ds)[:, :s]
+    y = jnp.sum(h_all * C.astype(jnp.float32)[:, :, None, :], axis=-1)  # (b, s, di)
+    y = y + xconv.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(xz.dtype) * jax.nn.silu(z)
+    return y, MambaState(conv=conv_hist.astype(jnp.float32), ssm=h_last)
+
+
+def mamba_forward(p, x, cfg: ModelConfig, state: MambaState | None = None):
+    """x: (b, s, d_model) -> (y (b, s, d_model), final state)."""
+    xz = x @ p["in_proj"].astype(x.dtype)
+    y, st = _mamba_inner(p, xz, cfg, state)
+    return y @ p["out_proj"].astype(x.dtype), st
+
+
+def mamba_decode_step(p, x, cfg: ModelConfig, state: MambaState):
+    return mamba_forward(p, x, cfg, state)
+
+
+def mamba_init_state(cfg: ModelConfig, b: int) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((b, cfg.ssm_conv_dim - 1, cfg.d_inner), jnp.float32),
+        ssm=jnp.zeros((b, cfg.d_inner, cfg.ssm_state_dim), jnp.float32),
+    )
+
+
+# =====================================================================
+# mLSTM (xLSTM): gated linear attention with matrix memory
+# =====================================================================
+class MLSTMState(NamedTuple):
+    C: jnp.ndarray  # (b, h, dk, dv) f32 matrix memory, scaled by exp(-m)
+    n: jnp.ndarray  # (b, h, dk) f32 normalizer, scaled by exp(-m)
+    m: jnp.ndarray  # (b, h) f32 running log-scale stabilizer
+
+
+def mlstm_desc(cfg: ModelConfig):
+    h = cfg.num_heads
+    dk = cfg.d_model // h
+    dv = cfg.d_model // h
+    return {
+        "wq": PD((cfg.d_model, h * dk), ("embed", None)),
+        "wk": PD((cfg.d_model, h * dk), ("embed", None)),
+        "wv": PD((cfg.d_model, h * dv), ("embed", "dv")),
+        "wi": PD((cfg.d_model, h), ("embed", None), scale=0.02),
+        "wf": PD((cfg.d_model, h), ("embed", None), scale=0.02),
+        "wo_gate": PD((cfg.d_model, cfg.d_model), ("embed", "dv")),
+        "w_out": PD((cfg.d_model, cfg.d_model), ("dv", "embed")),
+        "f_bias": PD((h,), (None,), init="ones"),
+    }
+
+
+def _mlstm_gates(p, x):
+    lf = jax.nn.log_sigmoid(
+        x.astype(jnp.float32) @ p["wf"].astype(jnp.float32)
+        + p["f_bias"].astype(jnp.float32))  # (b, s, h) <= 0
+    li = x.astype(jnp.float32) @ p["wi"].astype(jnp.float32)  # log input gate
+    return lf, li
+
+
+def mlstm_forward(p, x, cfg: ModelConfig, state: MLSTMState | None = None):
+    """Chunkwise mLSTM. x: (b, s, d_model)."""
+    b, s, dm = x.shape
+    h = cfg.num_heads
+    dk = dm // h
+    dv = dm // h
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, dk) / (dk ** 0.5)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, h, dk)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, h, dv)
+    lf, li = _mlstm_gates(p, x)  # (b, s, h)
+
+    chunk = min(cfg.mlstm_chunk, s)
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    S = nchunk * chunk
+
+    def to_chunks(a):
+        return a.reshape(b, nchunk, chunk, *a.shape[2:]).transpose(1, 0, *range(2, a.ndim + 1))
+
+    qc, kc, vc = map(to_chunks, (q, k, v))
+    lfc, lic = map(to_chunks, (lf, li))
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state.C, state.n, state.m
+
+    def chunk_body(carry, blk):
+        """Stabilized chunkwise mLSTM (xLSTM Appendix): the carried state
+        (C, n) is scaled by exp(-m_in); all exponents are shifted by a
+        per-position stabilizer m_t = max(intra log-weights, m_in + cum_t),
+        which cancels in the output ratio but never overflows."""
+        C, n, m_in = carry
+        qb, kb, vb, lfb, lib = blk  # (b, c, h, *)
+        cum = jnp.cumsum(lfb, axis=1)  # (b, c, h) within-chunk log decay
+        total = cum[:, -1]  # (b, h)
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        # intra log-weights: dec[t, s] = cum_t - cum_s + li_s  (s <= t)
+        dec = (cum[:, :, None, :] - cum[:, None, :, :] + lib[:, None, :, :]
+               ).transpose(0, 3, 1, 2)  # (b, h, t, s)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dec = jnp.where(tri[None, None], dec, -1e30)
+        inter_log = m_in[:, :, None] + cum.transpose(0, 2, 1)  # (b, h, t)
+        m_t = jnp.maximum(jnp.max(dec, -1), inter_log)  # (b, h, t)
+        wgt = jnp.exp(dec - m_t[..., None])  # <= 1
+        wgt_inter = jnp.exp(inter_log - m_t)  # (b, h, t)
+        logits = jnp.einsum("bthd,bshd->bhts", qf, kf)
+        intra = jnp.einsum("bhts,bshd->bthd", logits * wgt, vf)
+        den_k = jnp.einsum("bhts,bshd->bthd", wgt, kf)
+        inter = jnp.einsum("bthd,bhdv,bht->bthv", qf, C, wgt_inter)
+        num = intra + inter
+        den = jnp.einsum("bthd,bhd,bht->bth", qf, n, wgt_inter) \
+            + jnp.einsum("bthd,bthd->bth", qf, den_k)
+        mt_bth = m_t.transpose(0, 2, 1)  # (b, t, h)
+        out = num / jnp.maximum(jnp.abs(den), jnp.exp(-mt_bth))[..., None]
+        # ---- state update in the new scale m_out
+        s_log = (total[:, None] - cum + lib)  # (b, c, h) per-key exponent
+        m_out = jnp.maximum(m_in + total, jnp.max(s_log, axis=1))  # (b, h)
+        sdecay = jnp.exp(s_log - m_out[:, None, :])
+        carryscale = jnp.exp(m_in + total - m_out)
+        kv = jnp.einsum("bshd,bshv,bsh->bhdv", kf, vf, sdecay)
+        ksum = jnp.einsum("bshd,bsh->bhd", kf, sdecay)
+        C_new = carryscale[:, :, None, None] * C + kv
+        n_new = carryscale[:, :, None] * n + ksum
+        return (C_new, n_new, m_out), out
+
+    (C_f, n_f, m_f), outs = jax.lax.scan(
+        chunk_body, (C0, n0, m0), (qc, kc, vc, lfc, lic))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, S, h * dv)[:, :s]
+    gate = jax.nn.sigmoid(x.astype(jnp.float32) @ p["wo_gate"].astype(jnp.float32))
+    y = (out * gate).astype(x.dtype) @ p["w_out"].astype(x.dtype)
+    return y, MLSTMState(C_f, n_f, m_f)
+
+
+def mlstm_decode_step(p, x, cfg: ModelConfig, state: MLSTMState):
+    """Single-token recurrent step (O(1) memory), stabilized form."""
+    b, _, dm = x.shape
+    h = cfg.num_heads
+    dk = dm // h
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32) / (dk ** 0.5)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, h, dk).astype(jnp.float32)
+    lf, li = _mlstm_gates(p, x)  # (b, 1, h)
+    lf, li = lf[:, 0], li[:, 0]  # (b, h)
+    m_new = jnp.maximum(lf + state.m, li)
+    f = jnp.exp(lf + state.m - m_new)[..., None, None]
+    i = jnp.exp(li - m_new)[..., None, None]
+    C = f * state.C + i * k[..., :, None] * v[..., None, :]
+    n = f[..., 0] * state.n + i[..., 0] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    out = (num / den).reshape(b, 1, dm)
+    gate = jax.nn.sigmoid(x.astype(jnp.float32) @ p["wo_gate"].astype(jnp.float32))
+    y = (out * gate).astype(x.dtype) @ p["w_out"].astype(x.dtype)
+    return y, MLSTMState(C, n, m_new)
+
+
+def mlstm_init_state(cfg: ModelConfig, b: int) -> MLSTMState:
+    h = cfg.num_heads
+    dk = cfg.d_model // h
+    return MLSTMState(
+        C=jnp.zeros((b, h, dk, dk), jnp.float32),
+        n=jnp.zeros((b, h, dk), jnp.float32),
+        m=jnp.full((b, h), -1e30, jnp.float32),
+    )
+
+
+# =====================================================================
+# sLSTM (xLSTM): scalar memory, exponential gating, sequential scan
+# =====================================================================
+class SLSTMState(NamedTuple):
+    h: jnp.ndarray  # (b, d)
+    c: jnp.ndarray  # (b, d)
+    n: jnp.ndarray  # (b, d)
+    m: jnp.ndarray  # (b, d) stabilizer
+
+
+def slstm_desc(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "w_in": PD((d, 4 * d), ("embed", None)),   # i, f, z, o pre-acts
+        "r": PD((d, 4 * d), (None, None), scale=0.02),  # recurrent (replicated)
+        "b": PD((4 * d,), (None,), init="zeros"),
+    }
+
+
+def _slstm_step(p, carry: SLSTMState, x_t):
+    """x_t: (b, 4d) pre-projected input contribution."""
+    h, c, n, m = carry
+    pre = x_t + h @ p["r"].astype(x_t.dtype) + p["b"].astype(x_t.dtype)
+    i_p, f_p, z_p, o_p = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    m_new = jnp.maximum(f_p + m, i_p)  # exponential-gate stabilizer
+    i = jnp.exp(i_p - m_new)
+    f = jnp.exp(f_p + m - m_new)
+    c_new = f * c + i * jnp.tanh(z_p)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(o_p) * c_new / jnp.maximum(n_new, 1.0)
+    st = SLSTMState(h_new.astype(x_t.dtype), c_new, n_new, m_new)
+    return st, h_new.astype(x_t.dtype)
+
+
+def slstm_forward(p, x, cfg: ModelConfig, state: SLSTMState | None = None):
+    b, s, d = x.shape
+    xin = x @ p["w_in"].astype(x.dtype)  # (b, s, 4d)
+    if state is None:
+        state = slstm_init_state(cfg, b, x.dtype)
+    st, hs = jax.lax.scan(
+        lambda c, xt: _slstm_step(p, c, xt), state, xin.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2), st
+
+
+def slstm_decode_step(p, x, cfg: ModelConfig, state: SLSTMState):
+    xin = (x @ p["w_in"].astype(x.dtype))[:, 0]
+    st, hnew = _slstm_step(p, state, xin)
+    return hnew[:, None, :], st
+
+
+def slstm_init_state(cfg: ModelConfig, b: int, dtype=jnp.bfloat16) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        h=jnp.zeros((b, d), dtype),
+        c=jnp.zeros((b, d), jnp.float32),
+        n=jnp.zeros((b, d), jnp.float32),
+        m=jnp.zeros((b, d), jnp.float32),
+    )

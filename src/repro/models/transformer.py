@@ -1,0 +1,311 @@
+"""Decoder-LM assembly: heterogeneous per-group layer schedules, scanned
+over groups to keep HLO size / compile time flat in depth.
+
+A "group" is the repeating unit (cfg.group_size layers): dense archs have a
+1-layer group; Jamba an 8-layer group (1 attention + 7 Mamba, MoE every 2nd
+layer); xLSTM an 8-layer group (7 mLSTM + 1 sLSTM). Params for one group are
+described once and stacked with a leading ("layers",) axis; jax.lax.scan
+runs the groups. Per-layer caches/states are likewise stacked per group.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import ssm as S
+
+__all__ = ["layer_schedule", "model_desc", "forward", "init_caches",
+           "pooled_embeddings"]
+
+
+# ------------------------------------------------------------------ schedule
+class Entry(NamedTuple):
+    mixer: str            # attn | swa | mamba | mlstm | slstm
+    ffn: Optional[str]    # mlp | moe | None
+    cross: bool = False   # add a cross-attention sub-block (whisper decoder)
+
+
+def layer_schedule(cfg: ModelConfig) -> list[Entry]:
+    """The per-group layer schedule."""
+    out = []
+    for i in range(cfg.group_size):
+        if cfg.family in ("dense", "moe", "vlm"):
+            mixer = "swa" if cfg.sliding_window else "attn"
+        elif cfg.family == "hybrid":
+            mixer = "attn" if i in cfg.attn_layer_in_group else cfg.ssm_kind
+        elif cfg.family == "ssm":
+            mixer = "slstm" if i in cfg.slstm_layer_in_group else "mlstm"
+        elif cfg.family == "audio":
+            mixer = "attn"
+        else:
+            raise ValueError(cfg.family)
+        if cfg.d_ff == 0 and not cfg.moe_d_ff:
+            ffn = None
+        elif cfg.num_experts and (i % cfg.moe_period == cfg.moe_period - 1):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        out.append(Entry(mixer, ffn, cfg.family == "audio"))
+    return out
+
+
+# ------------------------------------------------------------------- descs
+def _mixer_desc(cfg: ModelConfig, mixer: str):
+    if mixer in ("attn", "swa"):
+        return A.attn_desc(cfg)
+    if mixer == "mamba":
+        return S.mamba_desc(cfg)
+    if mixer == "mlstm":
+        return S.mlstm_desc(cfg)
+    if mixer == "slstm":
+        return S.slstm_desc(cfg)
+    raise ValueError(mixer)
+
+
+def _block_desc(cfg: ModelConfig, e: Entry):
+    d = {"ln1": L.norm_desc(cfg), "mixer": _mixer_desc(cfg, e.mixer)}
+    if e.cross:
+        d["ln_x"] = L.norm_desc(cfg)
+        d["xattn"] = A.attn_desc(cfg, cross=True)
+    if e.ffn == "mlp":
+        d["ln2"] = L.norm_desc(cfg)
+        d["ffn"] = L.mlp_desc(cfg)
+    elif e.ffn == "moe":
+        d["ln2"] = L.norm_desc(cfg)
+        d["ffn"] = MOE.moe_desc(cfg)
+    return d
+
+
+def _stack_desc(desc, n: int):
+    return jax.tree.map(
+        lambda pd: PD((n, *pd.shape), ("layers", *pd.axes), pd.init, pd.scale),
+        desc, is_leaf=lambda x: isinstance(x, PD))
+
+
+def model_desc(cfg: ModelConfig):
+    """Full parameter description tree for a decoder LM."""
+    sched = layer_schedule(cfg)
+    group = {"blocks": [_block_desc(cfg, e) for e in sched]}
+    d = {
+        "embed": L.embedding_desc(cfg),
+        "groups": _stack_desc(group, cfg.num_groups),
+        "ln_f": L.norm_desc(cfg),
+    }
+    if cfg.family == "audio":
+        # sized for the stress shapes (real Whisper caps at 448 positions)
+        d["pos_emb"] = PD((32768, cfg.d_model), (None, "embed"), init="embed")
+    return d
+
+
+# ------------------------------------------------------------------- caches
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                enc_len: int = 0, dtype=None):
+    """Stacked per-group cache pytree for decode. max_len is the KV window
+    for attention layers (cfg.sliding_window caps it for SWA archs)."""
+    dtype = dtype or cfg.dtype
+    sched = layer_schedule(cfg)
+    g = cfg.num_groups
+    kvh, hd = cfg.num_kv_heads, cfg.hd
+    caches = []
+    for e in sched:
+        c: dict[str, Any] = {}
+        if e.mixer in ("attn", "swa"):
+            S_ = min(max_len, cfg.sliding_window) if e.mixer == "swa" else max_len
+            c["kv"] = A.KVCache(
+                k=jnp.zeros((g, batch, kvh, S_, hd), dtype),
+                v=jnp.zeros((g, batch, kvh, S_, hd), dtype),
+                pos=jnp.full((g, batch, S_), 2**30, jnp.int32),
+            )
+        elif e.mixer == "mamba":
+            st = S.mamba_init_state(cfg, batch)
+            c["ssm"] = jax.tree.map(lambda a: jnp.zeros((g, *a.shape), a.dtype), st)
+        elif e.mixer == "mlstm":
+            st = S.mlstm_init_state(cfg, batch)
+            c["ssm"] = jax.tree.map(lambda a: jnp.zeros((g, *a.shape), a.dtype), st)
+        elif e.mixer == "slstm":
+            st = S.slstm_init_state(cfg, batch)
+            c["ssm"] = jax.tree.map(lambda a: jnp.zeros((g, *a.shape), a.dtype), st)
+        if e.cross:
+            c["xkv"] = A.KVCache(
+                k=jnp.zeros((g, batch, kvh, enc_len, hd), dtype),
+                v=jnp.zeros((g, batch, kvh, enc_len, hd), dtype),
+                pos=jnp.broadcast_to(
+                    jnp.arange(enc_len, dtype=jnp.int32), (g, batch, enc_len)
+                ),
+            )
+        caches.append(c)
+    return caches
+
+
+# ------------------------------------------------------------------ forward
+def _apply_block(bp, x, cfg: ModelConfig, e: Entry, mode: str,
+                 cache, index, positions, kv_block, enc_out):
+    """One block. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(bp["ln1"], x, cfg)
+    new_cache = dict(cache) if cache is not None else {}
+    window = cfg.sliding_window if e.mixer == "swa" else None
+    if e.mixer in ("attn", "swa"):
+        if mode == "decode":
+            y, kv = A.decode_attention(
+                bp["mixer"], h, cfg, cache["kv"], index, window=window)
+            new_cache["kv"] = kv
+        elif mode == "prefill":
+            y, kv = A.attention(
+                bp["mixer"], h, cfg, positions=positions, causal=True,
+                window=window, kv_block=kv_block, return_cache=True)
+            new_cache["kv"] = kv
+        else:
+            y = A.attention(
+                bp["mixer"], h, cfg, positions=positions, causal=True,
+                window=window, kv_block=kv_block)
+    else:
+        fwd = {"mamba": S.mamba_forward, "mlstm": S.mlstm_forward,
+               "slstm": S.slstm_forward}[e.mixer]
+        step = {"mamba": S.mamba_decode_step, "mlstm": S.mlstm_decode_step,
+                "slstm": S.slstm_decode_step}[e.mixer]
+        if mode == "decode":
+            y, st = step(bp["mixer"], h, cfg, cache["ssm"])
+            new_cache["ssm"] = st
+        else:
+            y, st = fwd(bp["mixer"], h, cfg, None)
+            if mode == "prefill":
+                new_cache["ssm"] = st
+    x = x + y
+    if e.cross:
+        hx = L.apply_norm(bp["ln_x"], x, cfg)
+        if mode == "decode":
+            # reads the pre-computed encoder k/v cache; never writes
+            y, _ = A.decode_attention(
+                bp["xattn"], hx, cfg, cache["xkv"], index=index,
+                use_rope=False, xattn=True)
+        elif mode == "prefill":
+            y, xkv = A.attention(
+                bp["xattn"], hx, cfg, positions=positions, xattn_kv=enc_out,
+                use_rope=False, return_cache=True)
+            new_cache["xkv"] = xkv
+        else:
+            y = A.attention(bp["xattn"], hx, cfg, positions=positions,
+                            xattn_kv=enc_out, use_rope=False)
+        x = x + y
+    if e.ffn:
+        h2 = L.apply_norm(bp["ln2"], x, cfg)
+        if e.ffn == "moe":
+            y2, aux = MOE.apply_moe(bp["ffn"], h2, cfg)
+        else:
+            y2 = L.apply_mlp(bp["ffn"], h2, cfg)
+        x = x + y2
+    return x, new_cache, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, mode: str = "train",
+            caches=None, index=None, extra_embeds=None, kv_block=1024,
+            positions=None, enc_out=None):
+    """Decoder LM forward.
+
+    mode: train (no caches) | prefill (returns caches) | decode (s == 1,
+    caches required, index = current position).
+    extra_embeds: (b, p, d_model) prepended continuous embeddings (VLM).
+    enc_out: (b, s_enc, d_model) encoder output for cross-attention blocks.
+    Returns (logits, hidden, caches, aux_loss).
+    """
+    sched = layer_schedule(cfg)
+    if cfg.fsdp_constrain:
+        from repro.configs.base import spec_tree, DEFAULT_RULES
+        emb_spec = spec_tree(L.embedding_desc(cfg), DEFAULT_RULES)
+        params = dict(params, embed=jax.tree.map(
+            jax.lax.with_sharding_constraint, params["embed"], emb_spec))
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        if mode == "decode":
+            positions = jnp.full((b, s), index, jnp.int32)
+        else:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if cfg.family == "audio":
+        x = x + params["pos_emb"][positions].astype(x.dtype)
+
+    have_cache = caches is not None
+
+    if cfg.fsdp_constrain:
+        # params are STORED (data, model)-sharded; constrain each group's
+        # weights to the TP-only layout at use. XLA emits all-gather (fwd)
+        # and reduce-scatter (bwd) -- true FSDP/ZeRO-3 semantics.
+        from repro.configs.base import spec_tree, DEFAULT_RULES
+        tp_group_spec = spec_tree(
+            {"blocks": [_block_desc(cfg, e) for e in sched]}, DEFAULT_RULES)
+    else:
+        tp_group_spec = None
+
+    def group_fn(x, gparams, gcaches):
+        if tp_group_spec is not None:
+            # cast BEFORE the constraint so the FSDP all-gather moves bf16,
+            # not f32 master weights (halves weight-gather traffic)
+            def use(w, spec):
+                wc = w.astype(cfg.dtype) if (
+                    w.ndim >= 2 and w.dtype == jnp.float32) else w
+                return jax.lax.with_sharding_constraint(wc, spec)
+            gparams = jax.tree.map(use, gparams, tp_group_spec)
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = []
+        for i, e in enumerate(sched):
+            c = gcaches[i] if have_cache else None
+            x, nc, a = _apply_block(
+                gparams["blocks"][i], x, cfg, e, mode, c, index, positions,
+                kv_block, enc_out)
+            new_caches.append(nc)
+            aux = aux + a
+        return x, new_caches, aux
+
+    if cfg.remat != "none" and mode == "train":
+        policy = {
+            "block": jax.checkpoint_policies.nothing_saveable,
+            "full": jax.checkpoint_policies.nothing_saveable,
+            # save matmul outputs: ~25% less recompute, more live memory
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[cfg.remat]
+        group_fn = jax.checkpoint(group_fn, policy=policy)
+
+    if have_cache:
+        def scan_body(carry, xs):
+            xc, aux = carry
+            gparams, gcaches = xs
+            xc, ncaches, a = group_fn(xc, gparams, gcaches)
+            return (xc, aux + a), ncaches
+
+        (x, aux), new_caches = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)),
+            (params["groups"], caches),
+            unroll=cfg.num_groups if cfg.scan_unroll else 1)
+    else:
+        def scan_body(carry, gparams):
+            xc, aux = carry
+            xc, ncaches, a = group_fn(
+                xc, gparams, [None] * len(sched))
+            if mode == "prefill":
+                return (xc, aux + a), ncaches
+            return (xc, aux + a), None
+
+        (x, aux), new_caches = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), params["groups"],
+            unroll=cfg.num_groups if cfg.scan_unroll else 1)
+
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_from_hidden(params["embed"], x, cfg)
+    return logits, x, new_caches, aux
+
+
+def pooled_embeddings(params, cfg: ModelConfig, tokens, **kw):
+    """Mean-pooled final hidden state -- the valuation feature extractor."""
+    _, hidden, _, _ = forward(params, cfg, tokens, mode="train", **kw)
+    return jnp.mean(hidden.astype(jnp.float32), axis=1)

@@ -1,0 +1,69 @@
+"""Whisper-style encoder-decoder. The audio conv frontend is a STUB per the
+brief: `input_specs()` provides precomputed frame embeddings
+(b, enc_seq, d_model); the encoder is a non-causal transformer over them,
+the decoder a causal LM with cross-attention (built by transformer.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PD, ModelConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import transformer as T
+
+__all__ = ["whisper_desc", "encode", "whisper_forward"]
+
+
+def _enc_block_desc(cfg: ModelConfig):
+    return {
+        "ln1": L.norm_desc(cfg),
+        "attn": A.attn_desc(cfg),
+        "ln2": L.norm_desc(cfg),
+        "ffn": L.mlp_desc(cfg),
+    }
+
+
+def whisper_desc(cfg: ModelConfig):
+    enc_group = _enc_block_desc(cfg)
+    return {
+        "enc_pos": PD((cfg.encoder_seq, cfg.d_model), (None, "embed"), init="embed"),
+        "enc_groups": T._stack_desc(enc_group, cfg.encoder_layers),
+        "enc_ln_f": L.norm_desc(cfg),
+        "decoder": T.model_desc(cfg),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (b, enc_seq, d_model) stub embeddings -> encoder output."""
+    x = frames.astype(cfg.dtype) + params["enc_pos"].astype(cfg.dtype)[None]
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    def block(x, gp):
+        h = L.apply_norm(gp["ln1"], x, cfg)
+        x = x + A.attention(gp["attn"], h, cfg, positions=positions,
+                            causal=False, use_rope=False)
+        h = L.apply_norm(gp["ln2"], x, cfg)
+        return x + L.apply_mlp(gp["ffn"], h, cfg)
+
+    if cfg.remat != "none":
+        block = jax.checkpoint(block)
+    x, _ = jax.lax.scan(lambda c, gp: (block(c, gp), None), x,
+                        params["enc_groups"],
+                        unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+    return L.apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def whisper_forward(params, cfg: ModelConfig, tokens, frames=None,
+                    *, mode="train", caches=None, index=None, enc_out=None,
+                    kv_block=1024):
+    """Full enc-dec forward. In decode mode the encoder is not re-run: the
+    cross k/v live in the caches (built at prefill)."""
+    if mode != "decode" and enc_out is None:
+        enc_out = encode(params, cfg, frames)
+    return T.forward(
+        params["decoder"], cfg, tokens, mode=mode, caches=caches,
+        index=index, enc_out=enc_out, kv_block=kv_block)

@@ -1,0 +1,147 @@
+"""Batched serving engine: prefill/decode split with a continuous-batching
+slot scheduler (vLLM-style at the granularity JAX supports: fixed-shape
+slot pool, per-slot position/age, greedy or temperature sampling).
+
+The decode step is ONE jitted program over the whole slot pool; finished
+slots are refilled from the queue between steps (no recompile -- shapes are
+static). This is the serve-side counterpart of launch/dryrun's decode cell.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+
+__all__ = ["ServeConfig", "Engine"]
+
+
+@dataclass
+class ServeConfig:
+    max_slots: int = 8
+    max_len: int = 256
+    temperature: float = 0.0
+    eos_id: int = 1
+    seed: int = 0
+
+
+@dataclass
+class _Slot:
+    request_id: int = -1
+    prompt_len: int = 0
+    generated: list = field(default_factory=list)
+    done: bool = True
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.model = build_model(cfg)
+        self.slots = [_Slot() for _ in range(scfg.max_slots)]
+        self.caches = self.model.init_caches(scfg.max_slots, scfg.max_len)
+        self.pos = np.zeros(scfg.max_slots, np.int32)
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self.results: dict[int, list[int]] = {}
+        self._next_id = 0
+
+        def decode(params, tokens, caches, positions, key):
+            # per-slot positions: attention masks by cache.pos so a shared
+            # scalar index is not enough; we run with per-slot index via vmap
+            # over slots is costly -- instead we use the max position and
+            # rely on per-slot pos masking (cache.pos > real pos are 2^30).
+            logits, caches = self.model.decode_step(
+                params, {"tokens": tokens, "caches": caches,
+                         "index": jnp.max(positions)})
+            if scfg.temperature > 0:
+                nxt = jax.random.categorical(
+                    key, logits[:, 0] / scfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits[:, 0], axis=-1)
+            return nxt.astype(jnp.int32), caches
+
+        self._decode = jax.jit(decode)
+        self._key = jax.random.key(scfg.seed)
+
+    # ------------------------------------------------------------ public
+    def submit(self, prompt_tokens) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, np.asarray(prompt_tokens, np.int32)))
+        return rid
+
+    def run(self, max_steps: int = 10**6) -> dict[int, list[int]]:
+        """Drive until queue and slots drain (or step budget)."""
+        step = 0
+        while step < max_steps and (self.queue or
+                                    any(not s.done for s in self.slots)):
+            self._admit()
+            self._step()
+            step += 1
+        return self.results
+
+    # ----------------------------------------------------------- internal
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if not slot.done or not self.queue:
+                continue
+            rid, prompt = self.queue.pop(0)
+            # prefill one slot: simple per-slot prefill (batch 1), writing
+            # into the pooled cache at slot i
+            toks = jnp.asarray(prompt[None, :])
+            last_logits, caches1 = jax.jit(self.model.prefill)(
+                self.params, {"tokens": toks})
+            if self.scfg.temperature > 0:
+                self._key, sub = jax.random.split(self._key)
+                first = int(jax.random.categorical(
+                    sub, last_logits[0, 0] / self.scfg.temperature))
+            else:
+                first = int(jnp.argmax(last_logits[0, 0]))
+
+            def write(pool, one):
+                if one.ndim >= 4 and one.shape[-2] == prompt.shape[0]:
+                    # (g, 1, kv, s, hd) -> pool (g, slots, kv, S, hd)
+                    pad = pool.shape[-2] - one.shape[-2]
+                    one = jnp.pad(one, [(0, 0)] * (one.ndim - 2)
+                                  + [(0, pad), (0, 0)])
+                    return pool.at[:, i].set(one[:, 0])
+                if one.ndim == 3 and one.shape[-1] == prompt.shape[0]:
+                    pad = pool.shape[-1] - one.shape[-1]
+                    one = jnp.pad(one, [(0, 0)] * (one.ndim - 1) + [(0, pad)],
+                                  constant_values=2**30)
+                    return pool.at[:, i].set(one[:, 0])
+                return pool.at[:, i].set(one[:, 0])
+
+            self.caches = jax.tree.map(write, self.caches, caches1)
+            self.slots[i] = _Slot(rid, len(prompt), [first], False)
+            self.pos[i] = len(prompt)
+            if first == self.scfg.eos_id:
+                self.slots[i].done = True
+                self.results[rid] = [first]
+
+    def _step(self):
+        tokens = np.zeros((self.scfg.max_slots, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if not s.done and s.generated:
+                tokens[i, 0] = s.generated[-1]
+        self._key, sub = jax.random.split(self._key)
+        nxt, self.caches = self._decode(
+            self.params, jnp.asarray(tokens), self.caches,
+            jnp.asarray(self.pos), sub)
+        nxt = np.asarray(nxt)
+        for i, s in enumerate(self.slots):
+            if s.done:
+                continue
+            tok = int(nxt[i])
+            s.generated.append(tok)
+            self.pos[i] += 1
+            if tok == self.scfg.eos_id or self.pos[i] >= self.scfg.max_len - 1:
+                s.done = True
+                self.results[s.request_id] = s.generated

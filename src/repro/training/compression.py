@@ -1,0 +1,82 @@
+"""Gradient compression for cross-pod traffic.
+
+At 2+ pods the gradient all-reduce crosses the (slow) inter-pod links; we
+provide two standard schemes, applied to the POD-axis reduction only
+(intra-pod reductions stay full precision):
+
+  * int8 stochastic quantization (per-tensor scale) -- 4x wire reduction;
+  * top-k sparsification with error feedback (memory carried in the
+    optimizer-adjacent state) -- k defaults to 1%.
+
+Both are pure-JAX and pjit-compatible: quantize -> psum over 'pod' ->
+dequantize, expressed inside shard_map over the pod axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_allreduce_pod", "topk_error_feedback", "compress_grads"]
+
+
+def _quantize_int8(x, key):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / 127.0
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(x / scale + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_allreduce_pod(grads, key, axis_name: str = "pod"):
+    """Inside shard_map: stochastic-int8 the gradients, psum over pods in
+    int32 (wire: 1B/elem + scalar scales), dequantize with the mean scale."""
+    leaves, tdef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for x, k in zip(leaves, keys):
+        q, scale = _quantize_int8(x.astype(jnp.float32), k)
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        ssum = jax.lax.psum(scale, axis_name)
+        npod = jax.lax.psum(1, axis_name)
+        out.append((qsum.astype(jnp.float32) * (ssum / npod) / npod).astype(x.dtype))
+    return jax.tree.unflatten(tdef, out)
+
+
+def topk_error_feedback(grads, error, frac: float = 0.01):
+    """Top-|k| sparsification with error feedback.
+
+    Returns (sparse_grads, new_error). sparse_grads has the same dense
+    shape (zeros elsewhere) so downstream psum/optimizer code is unchanged;
+    on the wire a real deployment sends (values, indices).
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        k = max(1, int(frac * gf.size))
+        flat = jnp.abs(gf).reshape(-1)
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        mask = (jnp.abs(gf) >= thresh).astype(jnp.float32)
+        sparse = gf * mask
+        return sparse.astype(g.dtype), gf - sparse
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+            jax.tree.unflatten(tdef, [p[1] for p in pairs]))
+
+
+def init_error(grads_like):
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_grads(grads, state, scheme: str, key=None, frac: float = 0.01):
+    """Dispatcher used by the trainer when cross-pod compression is on."""
+    if scheme == "none":
+        return grads, state
+    if scheme == "topk_ef":
+        return topk_error_feedback(grads, state, frac)
+    raise ValueError(scheme)

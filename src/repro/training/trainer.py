@@ -1,0 +1,146 @@
+"""Training loop: pjit'd steps, gradient accumulation, fault tolerance
+(checkpoint/restart, straggler guard), deterministic data assignment.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import build_model
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.distributed import sharding as SH
+from repro.distributed.fault_tolerance import HealthLog, StepGuard
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    grad_accum: int = 1
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    step_deadline_s: float = float("inf")
+    strategy: Optional[str] = None
+    opt: AdamWConfig = field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig, mesh):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        strategy = tcfg.strategy or SH.strategy_for(cfg)
+        self.rules = SH.rules_for(cfg, strategy, mesh)
+        self.pspec = self.model.param_spec(self.rules)
+        self.psharding = SH.tree_named(mesh, self.pspec)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+        self.health = HealthLog()
+        self.guard = StepGuard(deadline_s=tcfg.step_deadline_s,
+                               on_retry=self._on_retry)
+        self._build_step()
+
+    # ------------------------------------------------------------ build
+    def _build_step(self):
+        model, opt, accum = self.model, self.tcfg.opt, self.tcfg.grad_accum
+
+        def step(params, opt_state, batch):
+            if accum == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    model.loss_fn, has_aux=True)(params, batch)
+            else:
+                def micro(c, mb):
+                    (l, m), g = jax.value_and_grad(
+                        model.loss_fn, has_aux=True)(params, mb)
+                    gs, ls = c
+                    return (jax.tree.map(jnp.add, gs, g), ls + l), m
+                micro_batches = jax.tree.map(
+                    lambda x: x.reshape(accum, x.shape[0] // accum,
+                                        *x.shape[1:]), batch)
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss), metrics = jax.lax.scan(
+                    micro, (zeros, jnp.zeros((), jnp.float32)), micro_batches)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss / accum
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            params, opt_state, om = adamw_update(opt, grads, opt_state, params)
+            return params, opt_state, dict(metrics, loss=loss, **om)
+
+        bspec = SH.batch_spec(self.cfg, "train", self.mesh)
+        self._bsharding = {
+            k: jax.sharding.NamedSharding(self.mesh, v)
+            for k, v in bspec.items()}
+        opt_spec = type(jax.eval_shape(adamw_init, self.model.abstract()))(
+            mu=self.pspec, nu=self.pspec,
+            count=jax.sharding.PartitionSpec())
+        self._osharding = SH.tree_named(self.mesh, opt_spec)
+        self.step_fn = jax.jit(
+            step,
+            in_shardings=(self.psharding, self._osharding, self._bsharding),
+            out_shardings=(self.psharding, self._osharding, None),
+            donate_argnums=(0, 1),
+        )
+
+    def _on_retry(self, attempt, err):
+        print(f"[fault-tolerance] step retry {attempt}: {err}")
+
+    # ------------------------------------------------------------- init
+    def init_state(self, seed: int = 0):
+        with self.mesh:
+            params = jax.jit(
+                self.model.init, out_shardings=self.psharding,
+                static_argnums=()
+            )(jax.random.key(seed))
+            opt_state = jax.jit(
+                adamw_init, out_shardings=self._osharding)(params)
+        return params, opt_state
+
+    def maybe_restore(self, params, opt_state):
+        start = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            (params, opt_state), start = self.ckpt.restore(
+                (params, opt_state),
+                shardings=(self.psharding, self._osharding))
+            print(f"[restore] resumed from step {start}")
+        return params, opt_state, start
+
+    # -------------------------------------------------------------- run
+    def fit(self, params, opt_state, batch_fn: Callable[[int], Any],
+            start_step: int = 0):
+        """batch_fn(step) -> host batch; deterministic in step so restarts
+        and elastic re-runs see identical data."""
+        from repro.data.pipeline import ShardedPrefetchLoader
+
+        metrics_hist = []
+        loader = ShardedPrefetchLoader(
+            batch_fn, self._bsharding, start_step=start_step)
+        with self.mesh:
+            for s in range(start_step, self.tcfg.steps):
+                step_idx, batch = next(loader)
+                assert step_idx == s
+                (params, opt_state, metrics), dt = self.guard.run(
+                    self.step_fn, params, opt_state, batch)
+                straggler = self.health.record(dt)
+                if straggler:
+                    print(f"[straggler] step {s} took {dt:.2f}s")
+                if s % self.tcfg.log_every == 0 or s == self.tcfg.steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    metrics_hist.append({"step": s, "time_s": dt, **m})
+                    print(f"step {s:5d} loss {m['loss']:.4f} "
+                          f"gnorm {m.get('grad_norm', 0):.2f} {dt*1e3:.0f}ms")
+                if self.ckpt and (s + 1) % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save_async(s + 1, (params, opt_state))
+        loader.close()
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state, metrics_hist

@@ -1,0 +1,143 @@
+"""Property/invariance tests on system internals (hypothesis-driven)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, init_params
+from repro.core.sti_knn import superdiagonal_g
+from repro.models import ssm as S
+
+
+# ------------------------------------------------------- g-vector properties
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 64), k=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_g_matches_paper_recurrence(n, k, seed):
+    """Closed-form reverse cumsum == the paper's sequential Alg. 1 loop."""
+    rng = np.random.default_rng(seed)
+    u = (rng.integers(0, 2, n) / k).astype(np.float32)
+    got = np.asarray(superdiagonal_g(jnp.asarray(u), k))
+    # paper's loop, 1-based j
+    g = np.zeros(n + 1)  # g[j] = phi_{j-1,j}, j = 2..n
+    if n > k:
+        g[n] = -2.0 * (n - k) / (n * (n - 1)) * u[n - 1]
+    for j in range(n, 2, -1):
+        if j > k + 1 and n > k:
+            g[j - 1] = g[j] + 2.0 * (j - k - 1) / ((j - 2) * (j - 1)) * (
+                u[j - 1] - u[j - 2])
+        else:
+            g[j - 1] = g[j]
+    want = np.zeros(n, np.float32)
+    want[1:] = g[2: n + 1]
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(3, 48), k=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_g_invariant_to_uniform_label_shift(n, k, seed):
+    """g depends on u only through DIFFERENCES u[j]-u[j-1] and u[n-1]:
+    adding a constant c to u shifts g by the last-term coefficient only."""
+    rng = np.random.default_rng(seed)
+    u = (rng.integers(0, 2, n) / k).astype(np.float32)
+    g1 = np.asarray(superdiagonal_g(jnp.asarray(u), k))
+    c = 0.37
+    g2 = np.asarray(superdiagonal_g(jnp.asarray(u + c), k))
+    if n > k:
+        shift = -2.0 * (n - k) / (n * (n - 1)) * c
+    else:
+        shift = 0.0
+    np.testing.assert_allclose(g2[1:], g1[1:] + shift, atol=1e-5)
+
+
+# --------------------------------------------------- chunked-scan invariance
+def _ssm_cfg(**kw):
+    base = dict(name="t", family="ssm", num_layers=2, d_model=32,
+                num_heads=4, num_kv_heads=4, d_ff=0, vocab_size=64,
+                head_dim=8, dtype=jnp.float32, dt_rank=4)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+@pytest.mark.parametrize("chunks", [(4, 16), (8, 32)])
+def test_mlstm_chunk_size_invariance(chunks):
+    """Chunkwise mLSTM must be exact: different chunk sizes, same output."""
+    c1, c2 = chunks
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32))
+    p = init_params(S.mlstm_desc(_ssm_cfg()), jax.random.key(0))
+    y1, st1 = S.mlstm_forward(p, x, _ssm_cfg(mlstm_chunk=c1))
+    y2, st2 = S.mlstm_forward(p, x, _ssm_cfg(mlstm_chunk=c2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1.C), np.asarray(st2.C),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("chunks", [(4, 16)])
+def test_mamba_chunk_size_invariance(chunks):
+    c1, c2 = chunks
+    cfg = _ssm_cfg(family="hybrid", ssm_kind="mamba",
+                   attn_layer_in_group=(0,), d_ff=64)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32))
+    p = init_params(S.mamba_desc(cfg), jax.random.key(0))
+    y1, st1 = S.mamba_forward(p, x, cfg.replace(mamba_chunk=c1))
+    y2, st2 = S.mamba_forward(p, x, cfg.replace(mamba_chunk=c2))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st1.ssm), np.asarray(st2.ssm),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_matches_stepwise_recurrence():
+    """Chunkwise parallel form == token-by-token decode steps."""
+    cfg = _ssm_cfg(mlstm_chunk=8)
+    rng = np.random.default_rng(2)
+    b, s, d = 1, 12, 32
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    p = init_params(S.mlstm_desc(cfg), jax.random.key(0))
+    y_par, _ = S.mlstm_forward(p, x, cfg)
+    st = S.mlstm_init_state(cfg, b)
+    outs = []
+    for t in range(s):
+        y_t, st = S.mlstm_decode_step(p, x[:, t:t + 1], cfg, st)
+        outs.append(y_t)
+    y_seq = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                               rtol=3e-4, atol=3e-4)
+
+
+# ------------------------------------------------------------ MoE invariants
+def test_moe_identical_tokens_get_identical_outputs():
+    from repro.models import moe as M
+    cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      head_dim=8, num_experts=4, capacity_factor=8.0,
+                      moe_group_size=16, dtype=jnp.float32)
+    p = init_params(M.moe_desc(cfg), jax.random.key(0))
+    tok = jax.random.normal(jax.random.key(1), (1, 1, 32))
+    x = jnp.tile(tok, (1, 8, 1))  # 8 copies of the same token
+    out, aux = M.apply_moe(p, x, cfg)
+    first = out[0, 0]
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.tile(np.asarray(first), (8, 1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 at most ~(1 - 1/topk...) tokens drop; output must stay
+    finite and the residual path preserves dropped tokens upstream."""
+    from repro.models import moe as M
+    cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      head_dim=8, num_experts=2, capacity_factor=1.0,
+                      moe_group_size=32, dtype=jnp.float32)
+    p = init_params(M.moe_desc(cfg), jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 32, 16))
+    out, aux = M.apply_moe(p, x, cfg)
+    assert np.isfinite(np.asarray(out)).all()
+    assert np.isfinite(float(aux))

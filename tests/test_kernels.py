@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.sti_fill import sti_fill_pallas
+from repro.kernels.distance import distance_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+
+# ------------------------------------------------------------------ sti_fill
+@pytest.mark.parametrize("t,n,bn,bt", [
+    (4, 16, 8, 2),
+    (7, 33, 16, 3),     # non-divisible shapes exercise padding
+    (16, 64, 64, 16),
+    (3, 128, 128, 1),
+    (12, 60, 32, 4),
+])
+def test_sti_fill_matches_ref(t, n, bn, bt):
+    rng = np.random.default_rng(t * 100 + n)
+    g = jnp.asarray(rng.normal(size=(t, n)).astype(np.float32))
+    ranks = jnp.asarray(
+        np.stack([rng.permutation(n) for _ in range(t)]).astype(np.int32)
+    )
+    want = ref.sti_fill_ref(g, ranks)
+    got = sti_fill_pallas(g, ranks, block_n=bn, block_t=bt, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_sti_fill_padding_is_exact():
+    """Padded ranks must reference zero-padded g so pads contribute 0."""
+    rng = np.random.default_rng(0)
+    t, n = 5, 37
+    g = jnp.asarray(rng.normal(size=(t, n)).astype(np.float32))
+    ranks = jnp.asarray(np.stack([rng.permutation(n) for _ in range(t)]).astype(np.int32))
+    want = ref.sti_fill_ref(g, ranks)
+    got = sti_fill_pallas(g, ranks, block_n=32, block_t=2, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_sti_fill_integrates_with_core():
+    from repro.core import sti_knn_interactions
+    import repro.kernels.ops  # registers the pallas fill  # noqa: F401
+
+    rng = np.random.default_rng(1)
+    n, t = 24, 9
+    x_train = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    y_train = jnp.asarray(rng.integers(0, 2, n).astype(np.int32))
+    x_test = jnp.asarray(rng.normal(size=(t, 3)).astype(np.float32))
+    y_test = jnp.asarray(rng.integers(0, 2, t).astype(np.int32))
+    a = sti_knn_interactions(x_train, y_train, x_test, y_test, 3, fill="xla")
+    b = sti_knn_interactions(x_train, y_train, x_test, y_test, 3, fill="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ------------------------------------------------------------------ distance
+@pytest.mark.parametrize("t,n,d,dtype", [
+    (8, 16, 4, jnp.float32),
+    (33, 65, 7, jnp.float32),   # ragged
+    (16, 16, 128, jnp.bfloat16),
+    (128, 64, 512, jnp.float32),
+])
+def test_distance_matches_ref(t, n, d, dtype):
+    rng = np.random.default_rng(n + d)
+    xt = jnp.asarray(rng.normal(size=(t, d))).astype(dtype)
+    xn = jnp.asarray(rng.normal(size=(n, d))).astype(dtype)
+    want = ref.distance_ref(xt, xn)
+    got = distance_pallas(xt, xn, block_t=16, block_n=16, block_d=64, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("b,h,s,d,causal,window", [
+    (1, 2, 64, 16, True, None),
+    (2, 1, 128, 32, True, None),
+    (1, 2, 96, 16, True, 32),    # sliding window, ragged seq
+    (1, 1, 64, 16, False, None),
+])
+def test_flash_attention_matches_ref(b, h, s, d, causal, window):
+    rng = np.random.default_rng(s + d)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    got = flash_attention_pallas(
+        q, k, v, causal=causal, window=window, block_q=32, block_k=32,
+        interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 32))).astype(dtype)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 32))).astype(dtype)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 32))).astype(dtype)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=5e-2
+    )

@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, prefetch, sharding plumbing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import ShardedPrefetchLoader, host_slice
+from repro.data import make_token_batch
+
+
+def _shardings():
+    dev = jax.devices()[0]
+    s = jax.sharding.SingleDeviceSharding(dev)
+    return {"tokens": s, "labels": s}
+
+
+def batch_fn(step):
+    toks, labels = make_token_batch(jax.random.key(step), 4, 8, 64)
+    return {"tokens": np.asarray(toks), "labels": np.asarray(labels)}
+
+
+def test_loader_is_deterministic_and_ordered():
+    a = ShardedPrefetchLoader(batch_fn, _shardings(), start_step=0)
+    got = [next(a) for _ in range(4)]
+    a.close()
+    assert [s for s, _ in got] == [0, 1, 2, 3]
+    # replay from step 2 reproduces the same data (restart contract)
+    b = ShardedPrefetchLoader(batch_fn, _shardings(), start_step=2)
+    s2, batch2 = next(b)
+    b.close()
+    assert s2 == 2
+    np.testing.assert_array_equal(
+        np.asarray(got[2][1]["tokens"]), np.asarray(batch2["tokens"]))
+
+
+def test_host_slice_partitions_exactly():
+    x = np.arange(24).reshape(12, 2)
+    parts = [host_slice(x, i, 4) for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(parts), x)
+
+
+def test_loader_surfaces_worker_errors():
+    def bad(step):
+        raise RuntimeError("boom")
+    l = ShardedPrefetchLoader(bad, _shardings())
+    try:
+        next(l)
+        assert False, "expected error"
+    except RuntimeError as e:
+        assert "boom" in str(e)
+    l.close()
