@@ -1,15 +1,19 @@
 """Benchmark harness -- one function per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call measured on this
-host's CPU; `derived` carries the table's scientific quantity).
+host's CPU; `derived` carries the table's scientific quantity). `--json`
+additionally writes BENCH_sti_knn.json so the perf trajectory is tracked
+across PRs (EXPERIMENTS.md records the history).
 
   PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run --only complexity
+  PYTHONPATH=src python -m benchmarks.run --only baselines --json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import time
 
 import numpy as np
@@ -83,6 +87,9 @@ def bench_complexity_scaling():
 
 # ------------------------------------------------------------ baselines:
 def bench_baselines():
+    from repro.core.sti_knn import _FILL_FNS
+    from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
     x, y, xt, yt = _problem(2048, 256)
     rows = [
         ("knn_shapley_n2048_t256", _time(knn_shapley_values, x, y, xt, yt, 5), ""),
@@ -90,6 +97,28 @@ def bench_baselines():
         ("sti_knn_n2048_t256", _time(sti_knn_interactions, x, y, xt, yt, 5), ""),
         ("sti_knn_sii_n2048_t256",
          _time(lambda: sti_knn_interactions(x, y, xt, yt, 5, mode="sii")), ""),
+        # fill/distance pinned (not "auto") so rows are comparable across
+        # hosts regardless of what a user's autotune cache contains
+        ("sti_knn_fused_n2048_t256",
+         _time(fused_sti_knn_interactions, x, y, xt, yt, 5, test_batch=64,
+               fill="chunked", fill_params={"chunk": 1}, distance="xla"),
+         "fill=chunked1;distance=xla"),
+    ]
+    # The PR-1 perf claim: the chunked scan fill vs the seed (t, n, n)-
+    # materializing XLA fill at the acceptance size (t=64, n=2048). The
+    # chunked fill's peak memory is O(chunk * n^2) (constant in t).
+    from repro.kernels.autotune import _synthetic_fill_problem
+
+    t, n = 64, 2048
+    g, ranks = _synthetic_fill_problem(n, t)
+    fill_xla = jax.jit(_FILL_FNS["xla"])
+    fill_chunked = jax.jit(lambda g, r: _FILL_FNS["chunked"](g, r, chunk=1))
+    us_seed = _time(fill_xla, g, ranks, reps=2)
+    us_chunked = _time(fill_chunked, g, ranks, reps=2)
+    rows += [
+        ("fill_xla_seed_t64_n2048", us_seed, "peak_mem=O(t*n^2)"),
+        ("fill_chunked_t64_n2048", us_chunked,
+         f"peak_mem=O(n^2);speedup_vs_seed={us_seed / us_chunked:.2f}x"),
     ]
     return rows
 
@@ -185,12 +214,35 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_sti_knn.json (perf trajectory "
+                         "tracked across PRs)")
+    ap.add_argument("--json-path", default=None,
+                    help="output path for the JSON report (implies --json)")
     args = ap.parse_args()
+    if args.json_path:
+        args.json = True
+    args.json_path = args.json_path or "BENCH_sti_knn.json"
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
+    all_rows = []
     for nm in names:
         for row in BENCHES[nm]():
-            print(f"{row[0]},{row[1]:.1f},{row[2]}")
+            print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+            all_rows.append(
+                {"bench": nm, "name": row[0],
+                 "us_per_call": round(float(row[1]), 1), "derived": row[2]})
+    if args.json:
+        payload = {
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "benches": names,
+            "rows": all_rows,
+        }
+        with open(args.json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.json_path} ({len(all_rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,15 @@ from repro.core import (
 )
 from repro.core.valuation import DataValuator
 
+# Importing the kernels package registers the Pallas fill variants
+# ("pallas", "pallas_interpret") into the core fill registry, so
+# sti_knn_interactions(..., fill="pallas") works out of the box.
+from repro.kernels import ops as _ops  # noqa: F401
+from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
 __all__ = [
     "sti_knn_interactions",
+    "fused_sti_knn_interactions",
     "knn_shapley_values",
     "loo_values",
     "analysis",

@@ -4,7 +4,9 @@ from repro.core.sti_knn import (
     superdiagonal_g,
     pairwise_sq_dists,
     ranks_from_distances,
+    ranks_from_order,
     register_fill_fn,
+    resolve_fill,
 )
 from repro.core.knn_shapley import knn_shapley_values
 from repro.core.loo import loo_values
@@ -16,7 +18,9 @@ __all__ = [
     "superdiagonal_g",
     "pairwise_sq_dists",
     "ranks_from_distances",
+    "ranks_from_order",
     "register_fill_fn",
+    "resolve_fill",
     "knn_shapley_values",
     "loo_values",
     "analysis",

@@ -32,10 +32,13 @@ import jax.numpy as jnp
 
 __all__ = [
     "superdiagonal_g",
+    "ranks_from_order",
     "ranks_from_distances",
     "pairwise_sq_dists",
     "sti_knn_interactions",
     "sti_knn_matrix_one_test",
+    "register_fill_fn",
+    "resolve_fill",
     "InteractionMode",
 ]
 
@@ -112,21 +115,32 @@ def pairwise_sq_dists(x_test: jnp.ndarray, x_train: jnp.ndarray) -> jnp.ndarray:
     return jnp.maximum(d2, 0.0)
 
 
+def ranks_from_order(order: jnp.ndarray) -> jnp.ndarray:
+    """(t, n) argsort permutation -> (t, n) integer ranks (0 = closest).
+
+    Inverts each row of `order` by scatter; shared by the streamed scan path,
+    the local pjit step, and the fused pipeline so the rank convention lives
+    in exactly one place.
+    """
+    t, n = order.shape
+    ranks = jnp.zeros_like(order)
+    return ranks.at[jnp.arange(t)[:, None], order].set(
+        jnp.broadcast_to(jnp.arange(n, dtype=order.dtype), order.shape)
+    )
+
+
 def ranks_from_distances(d2: jnp.ndarray) -> jnp.ndarray:
     """(t, n) distances -> (t, n) integer ranks (0 = closest), stable ties."""
-    order = jnp.argsort(d2, axis=-1, stable=True)
-    n = d2.shape[-1]
-    ranks = jnp.zeros_like(order)
-    return ranks.at[
-        jnp.arange(d2.shape[0])[:, None], order
-    ].set(jnp.broadcast_to(jnp.arange(n), d2.shape))
+    return ranks_from_order(jnp.argsort(d2, axis=-1, stable=True))
 
 
 def _fill_xla(g: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
     """Sum over test points of g_p[max(r_p[a], r_p[b])] -> (n, n).
 
-    Pure-XLA reference path; the Pallas kernel (repro.kernels.sti_fill)
-    computes the same quantity tile-wise without materializing (t, n, n).
+    Pure-XLA reference path. Materializes the full (t, n, n) gather, so peak
+    memory is O(t n^2): kept as the correctness oracle, not the default.
+    The production fills below (and the Pallas kernel in
+    repro.kernels.sti_fill) compute the same quantity in O(chunk * n^2).
     """
 
     def one(g_p, r_p):
@@ -136,26 +150,96 @@ def _fill_xla(g: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jax.vmap(one)(g, ranks), axis=0)
 
 
+def _scan_fill(one_fn: Callable, g, ranks, chunk: int) -> jnp.ndarray:
+    """Shared scaffolding for the streaming fills: pad the test dim to a
+    multiple of `chunk` (padded rows have g == 0, so every value they
+    contribute is exactly 0), then lax.scan `chunk` test points at a time
+    into an (n, n) f32 accumulator. `one_fn(g_p, r_p) -> (n, n)` is the
+    per-test-point kernel."""
+    t, n = g.shape
+    chunk = max(1, min(int(chunk), t))
+    g = g.astype(jnp.float32)
+    pad = (-t) % chunk
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        ranks = jnp.pad(ranks, ((0, pad), (0, 0)))
+
+    def body(acc, batch):
+        gc, rc = batch
+        return acc + jnp.sum(jax.vmap(one_fn)(gc, rc), axis=0), None
+
+    acc, _ = jax.lax.scan(
+        body,
+        jnp.zeros((n, n), jnp.float32),
+        (g.reshape(-1, chunk, n), ranks.reshape(-1, chunk, n)),
+    )
+    return acc
+
+
+def _fill_chunked(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.ndarray:
+    """Chunked scan fill: constant memory in t (peak O(chunk * n^2)).
+
+    Per test point the matrix in *sorted* coordinates is
+        M[i, j] = g[max(i, j)] = where(j >= i, g[j], g[i])
+    (a broadcasted select, no gather), and the train-coordinate matrix is the
+    row/column permutation M[r_p][:, r_p]. A lax.scan streams `chunk` test
+    points at a time into the (n, n) f32 accumulator, so nothing of size
+    O(t n^2) ever exists -- this is the default fill (EXPERIMENTS.md
+    "Fill variants" measures it 2-3x faster than `_fill_xla` on CPU at
+    t=64, n=2048 on top of the memory win).
+    """
+    idx = jnp.arange(g.shape[-1])
+
+    def one(g_p, r_p):
+        m_sorted = jnp.where(idx[None, :] >= idx[:, None], g_p[None, :], g_p[:, None])
+        return m_sorted[r_p][:, r_p]
+
+    return _scan_fill(one, g, ranks, chunk)
+
+
+def _fill_onehot(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.ndarray:
+    """One-hot-matmul MXU fill: expresses the max-gather as a GEMM.
+
+    With C[a, j] = 1[r_a <= j] (cumulative one-hot of the ranks) and
+    dg[j] = g[j] - g[j+1] (g[n] := 0), the telescoping sum gives
+        sum_j dg[j] C[a, j] C[b, j] = g[max(r_a, r_b)]
+    so each test point contributes (C * dg) @ C^T -- an (n, n, n) matmul the
+    MXU executes at full tilt. O(t n^3) FLOPs (vs O(t n^2) for the gather
+    fills) but no gather unit pressure; wins only where matmul throughput
+    dwarfs gather throughput (see EXPERIMENTS.md "Fill variants").
+    """
+    thresh = jnp.arange(g.shape[-1])
+
+    def one(g_p, r_p):
+        dg = g_p - jnp.concatenate([g_p[1:], jnp.zeros((1,), g_p.dtype)])
+        c = (r_p[:, None] <= thresh[None, :]).astype(jnp.float32)
+        return jax.lax.dot_general(
+            c * dg[None, :], c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    return _scan_fill(one, g, ranks, chunk)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "mode", "test_batch", "fill_fn_name"),
+    static_argnames=("k", "mode", "test_batch", "fill_fn_name", "fill_static"),
 )
 def _sti_knn_jit(
-    x_train, y_train, x_test, y_test, k, mode, test_batch, fill_fn_name
+    x_train, y_train, x_test, y_test, k, mode, test_batch, fill_fn_name,
+    fill_static=(),
 ):
     n = x_train.shape[0]
     t = x_test.shape[0]
     acc_dtype = jnp.float32
-    fill = _FILL_FNS[fill_fn_name]
+    fill = functools.partial(_FILL_FNS[fill_fn_name], **dict(fill_static))
 
     def body(carry, batch):
         acc, diag = carry
         xb, yb = batch
         d2 = pairwise_sq_dists(xb, x_train)
         order = jnp.argsort(d2, axis=-1, stable=True)
-        ranks = jnp.zeros_like(order).at[
-            jnp.arange(xb.shape[0])[:, None], order
-        ].set(jnp.broadcast_to(jnp.arange(n), d2.shape))
+        ranks = ranks_from_order(order)
         match = (y_train[order] == yb[:, None]).astype(acc_dtype)
         u = match / k
         g = superdiagonal_g(u, k, mode=mode)
@@ -183,12 +267,77 @@ def _sti_knn_jit(
     return phi
 
 
-_FILL_FNS: dict[str, Callable] = {"xla": _fill_xla}
+# Fill registry: every entry computes sum_p g[p, max(ranks[p,a], ranks[p,b])].
+# "xla" is the O(t n^2)-memory oracle; "chunked" (default) and "onehot" stream
+# in O(chunk n^2); the Pallas kernel registers itself as "pallas" /
+# "pallas_interpret" when repro.kernels is imported (repro/__init__ does).
+_FILL_FNS: dict[str, Callable] = {
+    "xla": _fill_xla,
+    "chunked": _fill_chunked,
+    "onehot": _fill_onehot,
+}
+
+
+def _accepted_params(fn: Callable, params: dict) -> dict:
+    """Subset of `params` that `fn(g, ranks, **...)` can accept (a fn with
+    **kwargs accepts everything)."""
+    import inspect
+
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return dict(params)
+    if any(p.kind is inspect.Parameter.VAR_KEYWORD
+           for p in sig.parameters.values()):
+        return dict(params)
+    return {k: v for k, v in params.items() if k in sig.parameters}
 
 
 def register_fill_fn(name: str, fn: Callable) -> None:
-    """Register an alternative fill implementation (e.g. the Pallas kernel)."""
+    """Register an alternative fill implementation (e.g. the Pallas kernel).
+
+    `fn(g, ranks, **static_params) -> (n, n) f32`; static params must be
+    hashable (they become part of the jit cache key).
+    """
     _FILL_FNS[name] = fn
+
+
+def resolve_fill(
+    fill: str,
+    n: int,
+    t: int,
+    *,
+    fill_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> tuple[str, tuple]:
+    """Resolve a fill request to (registry_name, hashable static params).
+
+    "auto" consults the persistent autotune cache (repro.kernels.autotune)
+    for the winning variant at this (n, t, backend); on a cache miss it
+    either runs the tuner (autotune=True) or falls back to the backend
+    heuristic. Explicit `fill_params` override tuned ones.
+    """
+    params = dict(fill_params or {})
+    if fill == "auto":
+        from repro.kernels.autotune import best_fill  # lazy: avoids cycle
+
+        name, tuned = best_fill(n, t, allow_tune=autotune)
+        # User params are a hint for whichever variant wins: keep only the
+        # ones the winner accepts (e.g. a chunk= hint is dropped, not a
+        # crash, when the cache resolves to the parameterless "xla").
+        tuned.update(params)
+        params = _accepted_params(_FILL_FNS[name], tuned)
+        fill = name
+    if fill not in _FILL_FNS:
+        raise ValueError(
+            f"unknown fill {fill!r}; registered: {sorted(_FILL_FNS)}"
+        )
+    bad = set(params) - set(_accepted_params(_FILL_FNS[fill], params))
+    if bad:
+        raise ValueError(
+            f"fill {fill!r} does not accept params {sorted(bad)}"
+        )
+    return fill, tuple(sorted(params.items()))
 
 
 def sti_knn_interactions(
@@ -200,19 +349,34 @@ def sti_knn_interactions(
     *,
     mode: InteractionMode = "sti",
     test_batch: int = 256,
-    fill: str = "xla",
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    autotune: bool = False,
 ) -> jnp.ndarray:
     """Full STI-KNN: (n, n) symmetric interaction matrix, diagonal = main terms.
 
     O(t n^2) exactly as the paper's Algorithm 1; test points are streamed so
-    peak memory is O(n^2 + test_batch * n).
+    peak memory is O(n^2 + test_batch * n) with the default chunked fill
+    (fill="xla" restores the seed reference, which peaks at
+    O(test_batch * n^2)). fill="auto" consults the block autotuner cache;
+    autotune=True times the candidates for this size once and persists the
+    winner.
     """
     if x_train.ndim != 2 or x_test.ndim != 2:
         raise ValueError("features must be (num_points, dim)")
     if k < 1:
         raise ValueError("k must be >= 1")
+    if x_test.shape[0] < 1:
+        raise ValueError("need at least one test point")
+    # the fill executes on (test_batch, n) slices: key the autotune lookup on
+    # the executed shape, not the total test count
+    fill_name, fill_static = resolve_fill(
+        fill, x_train.shape[0], min(int(test_batch), x_test.shape[0]),
+        fill_params=fill_params, autotune=autotune,
+    )
     return _sti_knn_jit(
-        x_train, y_train, x_test, y_test, int(k), mode, int(test_batch), fill
+        x_train, y_train, x_test, y_test, int(k), mode, int(test_batch),
+        fill_name, fill_static,
     )
 
 

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.sti_knn import (
     pairwise_sq_dists,
+    ranks_from_order,
     sti_knn_interactions,
     superdiagonal_g,
 )
@@ -42,16 +43,45 @@ class DataValuator:
     embed_fn: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None
     mode: str = "sti"
     test_batch: int = 256
-    fill: str = "xla"
+    # fill="auto" consults the persistent block autotuner cache
+    # (repro.kernels.autotune); engine="fused" streams donated-accumulator
+    # steps through the fused distance->rank->g->fill pipeline, "scan" is the
+    # single-jit lax.scan path.
+    fill: str = "auto"
+    engine: str = "fused"
 
     def _embed(self, x):
         return x if self.embed_fn is None else self.embed_fn(x)
 
-    def interaction_matrix(self, x_train, y_train, x_test, y_test):
+    def interaction_matrix(self, x_train, y_train, x_test, y_test,
+                           *, autotune: bool = False):
+        if self.engine == "fused":
+            from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
+            return fused_sti_knn_interactions(
+                self._embed(x_train), y_train, self._embed(x_test), y_test,
+                self.k, mode=self.mode, test_batch=self.test_batch,
+                fill=self.fill, autotune=autotune,
+            )
+        if self.engine != "scan":
+            raise ValueError(f"unknown engine: {self.engine!r}")
         return sti_knn_interactions(
             self._embed(x_train), y_train, self._embed(x_test), y_test,
             self.k, mode=self.mode, test_batch=self.test_batch, fill=self.fill,
+            autotune=autotune,
         )
+
+    def autotune(self, n: int, t: int, d: Optional[int] = None) -> tuple[str, dict]:
+        """Pre-tune the fill (and, given the feature dim `d`, the distance
+        kernel) for an (n, t) problem size; persists the winners so later
+        `interaction_matrix` calls (any process) pick them up. Pass the
+        per-call test batch as `t` when streaming (the fill executes on
+        (test_batch, n) slices)."""
+        from repro.kernels.autotune import autotune_distance, autotune_fill
+
+        if d is not None:
+            autotune_distance(t, n, d)
+        return autotune_fill(n, t)
 
     def shapley_values(self, x_train, y_train, x_test, y_test):
         return knn_shapley_values(
@@ -71,12 +101,9 @@ def _sti_step_local(x_train, y_train, x_test, y_test, k: int, mode: str):
     Returns (phi_sum (n, n) f32, diag_sum (n,) f32) NOT yet divided by t, so
     partial results from test shards combine by addition.
     """
-    n = x_train.shape[0]
     d2 = pairwise_sq_dists(x_test, x_train)
     order = jnp.argsort(d2, axis=-1, stable=True)
-    ranks = jnp.zeros_like(order).at[
-        jnp.arange(x_test.shape[0])[:, None], order
-    ].set(jnp.broadcast_to(jnp.arange(n), d2.shape))
+    ranks = ranks_from_order(order)
     u = (y_train[order] == y_test[:, None]).astype(jnp.float32) / k
     g = superdiagonal_g(u, k, mode=mode)
 

@@ -1,12 +1,16 @@
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 from repro.kernels.sti_fill import sti_fill_pallas
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sti_pipeline import fused_sti_knn_interactions, make_fused_step
 
 __all__ = [
+    "autotune",
     "ops",
     "ref",
     "sti_fill_pallas",
     "distance_pallas",
     "flash_attention_pallas",
+    "fused_sti_knn_interactions",
+    "make_fused_step",
 ]

@@ -1,0 +1,322 @@
+"""Persistent block/chunk autotuner for the STI valuation hot loops.
+
+Times candidate configurations of the fill registry (chunk sizes, Pallas
+block shapes) and of the tiled distance kernel on synthetic data shaped like
+the caller's problem, then caches the winner in a JSON file keyed by
+(kind, backend, n-bucket, t-bucket). `sti_knn_interactions(..., fill="auto")`,
+the fused pipeline, and `DataValuator` consult the cache on every call; a
+miss falls back to a backend heuristic unless the caller opts into tuning
+(`autotune=True`), so the first tuned run pays the measurement cost once and
+every later process reuses it.
+
+Cache location: $REPRO_AUTOTUNE_CACHE, else ~/.cache/repro/autotune.json.
+Sizes are bucketed to the next power of two so nearby problem sizes share an
+entry, and the fill is timed on a t-sample (fill cost is linear in t), which
+keeps tuning to a few hundred ms even at n=4096.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import tempfile
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "cache_path",
+    "clear_cache",
+    "fill_candidates",
+    "autotune_fill",
+    "lookup_fill",
+    "best_fill",
+    "distance_candidates",
+    "autotune_distance",
+    "best_distance",
+]
+
+_LOCK = threading.Lock()
+# Fill timing is linear in t: measure on at most this many test rows and
+# transfer the winner to the full t.
+_SAMPLE_T = 16
+
+
+def cache_path(path: Optional[str] = None) -> str:
+    if path is not None:
+        return path
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json")
+
+
+# fill="auto" resolves on every valuation call: memoize the parsed cache per
+# (path, mtime) so the hot path does one os.stat, not a JSON parse. External
+# writers (other processes) bump the mtime and invalidate naturally.
+_MEMO: dict[str, tuple[float, dict]] = {}
+
+
+def _load(path: Optional[str]) -> dict:
+    p = cache_path(path)
+    try:
+        mtime = os.stat(p).st_mtime_ns
+    except OSError:
+        _MEMO.pop(p, None)
+        return {}
+    hit = _MEMO.get(p)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    try:
+        with open(p) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        data = {}
+    _MEMO[p] = (mtime, data)
+    return data
+
+
+def _save(path: Optional[str], data: dict) -> None:
+    p = cache_path(path)
+    os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, p)
+        _MEMO[p] = (os.stat(p).st_mtime_ns, data)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def clear_cache(path: Optional[str] = None) -> None:
+    _MEMO.pop(cache_path(path), None)
+    try:
+        os.unlink(cache_path(path))
+    except OSError:
+        pass
+
+
+def _bucket(x: int) -> int:
+    """Next power of two >= x (>= 1): nearby sizes share a cache entry."""
+    return 1 << max(0, int(np.ceil(np.log2(max(1, x)))))
+
+
+def _key(kind: str, backend: str, n: int, t: int) -> str:
+    return f"{kind}:{backend}:n{_bucket(n)}:t{_bucket(t)}"
+
+
+def _time_call(fn, *args, reps: int = 2) -> float:
+    out = fn(*args)  # compile + warmup
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _synthetic_fill_problem(n: int, ts: int):
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(ts, n)).astype(np.float32))
+    ranks = jnp.asarray(
+        np.stack([rng.permutation(n) for _ in range(ts)]).astype(np.int32)
+    )
+    return g, ranks
+
+
+# ----------------------------------------------------------------- fill ----
+def fill_candidates(n: int, t: int, backend: str) -> list[tuple[str, dict]]:
+    """Candidate (registry_name, static_params) per backend.
+
+    Pallas block_t/block_n shapes only make sense compiled for TPU; in
+    interpret mode they would be timed as Python and always lose, so they are
+    TPU-only candidates. The one-hot MXU fill is O(t n^3) FLOPs -- only a
+    contender at small n or on matmul-rich hardware.
+    """
+    cands: list[tuple[str, dict]] = [
+        ("chunked", {"chunk": c}) for c in (1, 2, 4, 8) if c <= max(1, t)
+    ]
+    cands.append(("xla", {}))
+    if n <= 512 or backend == "tpu":
+        cands.append(("onehot", {"chunk": 1}))
+    if backend == "tpu":
+        for bn in (128, 256, 512):
+            if bn <= max(128, n):
+                cands.append(("pallas", {"block_n": bn}))
+    return cands
+
+
+def default_fill(backend: str) -> tuple[str, dict]:
+    if backend == "tpu":
+        return "pallas", {}
+    return "chunked", {"chunk": 1}
+
+
+def autotune_fill(
+    n: int,
+    t: int,
+    *,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> tuple[str, dict]:
+    """Time every fill candidate at this (n, t, backend); persist the winner."""
+    from repro.core.sti_knn import _FILL_FNS
+
+    backend = backend or jax.default_backend()
+    ts = int(min(max(1, t), _SAMPLE_T))
+    g, ranks = _synthetic_fill_problem(n, ts)
+    timings: dict[str, float] = {}
+    for name, params in fill_candidates(n, ts, backend):
+        if name not in _FILL_FNS:
+            continue
+        fn = jax.jit(functools.partial(_FILL_FNS[name], **params))
+        try:
+            us = _time_call(fn, g, ranks, reps=reps)
+        except Exception:  # candidate unsupported on this backend
+            continue
+        timings[f"{name} {json.dumps(params, sort_keys=True)}"] = us
+        if verbose:
+            print(f"autotune fill n={n} t={t} {name} {params}: {us:.0f}us")
+    if not timings:
+        return default_fill(backend)
+    winner = min(timings, key=timings.get)
+    name, params_json = winner.split(" ", 1)
+    params = json.loads(params_json)
+    entry = {
+        "fill": name,
+        "params": params,
+        "us": timings[winner],
+        "sample_t": ts,
+        "candidates": timings,
+    }
+    with _LOCK:
+        # copy: never mutate the _MEMO-shared dict before _save succeeds.
+        # Cross-process concurrent tunes of the SAME file are last-writer-
+        # wins per entry set; acceptable for a self-healing cache (a dropped
+        # entry just falls back to the heuristic until re-tuned).
+        data = dict(_load(path))
+        data[_key("fill", backend, n, t)] = entry
+        _save(path, data)
+    return name, params
+
+
+def lookup_fill(
+    n: int, t: int, *, backend: Optional[str] = None, path: Optional[str] = None
+) -> Optional[tuple[str, dict]]:
+    backend = backend or jax.default_backend()
+    entry = _load(path).get(_key("fill", backend, n, t))
+    if not isinstance(entry, dict) or "fill" not in entry:
+        return None
+    return str(entry["fill"]), dict(entry.get("params") or {})
+
+
+def best_fill(
+    n: int,
+    t: int,
+    *,
+    backend: Optional[str] = None,
+    allow_tune: bool = False,
+    path: Optional[str] = None,
+) -> tuple[str, dict]:
+    """Cache hit > (optional) fresh tune > backend heuristic."""
+    from repro.core.sti_knn import _FILL_FNS
+
+    backend = backend or jax.default_backend()
+    hit = lookup_fill(n, t, backend=backend, path=path)
+    if hit is not None and hit[0] in _FILL_FNS:
+        return hit
+    if allow_tune:
+        return autotune_fill(n, t, backend=backend, path=path)
+    name, params = default_fill(backend)
+    if name not in _FILL_FNS:  # pallas not registered: fall back to chunked
+        name, params = "chunked", {"chunk": 1}
+    return name, params
+
+
+# ------------------------------------------------------------- distance ----
+def distance_candidates(backend: str) -> list[tuple[str, dict]]:
+    if backend != "tpu":
+        # interpret-mode Pallas is Python-speed; XLA's fused expansion wins
+        # by construction off-TPU, so there is nothing to measure.
+        return [("xla", {})]
+    cands: list[tuple[str, dict]] = [("xla", {})]
+    for bt in (128, 256):
+        for bn in (128, 256, 512):
+            cands.append(("pallas", {"block_t": bt, "block_n": bn}))
+    return cands
+
+
+def autotune_distance(
+    t: int,
+    n: int,
+    d: int,
+    *,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    path: Optional[str] = None,
+) -> tuple[str, dict]:
+    """Time distance candidates at (t, n, d); persist the winner per backend."""
+    from repro.core.sti_knn import pairwise_sq_dists
+    from repro.kernels.distance import distance_pallas
+
+    backend = backend or jax.default_backend()
+    cands = distance_candidates(backend)
+    if len(cands) == 1:
+        return cands[0]
+    rng = np.random.default_rng(0)
+    xt = jnp.asarray(rng.normal(size=(min(t, 256), d)).astype(np.float32))
+    xn = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    timings: dict[str, float] = {}
+    for name, params in cands:
+        if name == "xla":
+            fn = jax.jit(pairwise_sq_dists)
+        else:
+            fn = functools.partial(distance_pallas, **params)
+        try:
+            us = _time_call(fn, xt, xn, reps=reps)
+        except Exception:
+            continue
+        timings[f"{name} {json.dumps(params, sort_keys=True)}"] = us
+    if not timings:
+        return "xla", {}
+    winner = min(timings, key=timings.get)
+    name, params_json = winner.split(" ", 1)
+    params = json.loads(params_json)
+    with _LOCK:
+        data = dict(_load(path))
+        data[_key(f"distance_d{d}", backend, n, t)] = {
+            "distance": name, "params": params,
+            "us": timings[winner], "candidates": timings,
+        }
+        _save(path, data)
+    return name, params
+
+
+def best_distance(
+    t: int,
+    n: int,
+    d: int,
+    *,
+    backend: Optional[str] = None,
+    allow_tune: bool = False,
+    path: Optional[str] = None,
+) -> tuple[str, dict]:
+    backend = backend or jax.default_backend()
+    entry = _load(path).get(_key(f"distance_d{d}", backend, n, t))
+    if isinstance(entry, dict) and "distance" in entry:
+        return str(entry["distance"]), dict(entry.get("params") or {})
+    if allow_tune:
+        return autotune_distance(t, n, d, backend=backend, path=path)
+    return ("pallas", {}) if backend == "tpu" else ("xla", {})

@@ -57,5 +57,21 @@ def flash_attention(q, k, v, *, causal=True, window=None,
 
 # Make the Pallas fill selectable from the core streaming API:
 #   sti_knn_interactions(..., fill="pallas")
-register_fill_fn("pallas", lambda g, ranks: sti_fill_pallas(g, ranks))
-register_fill_fn("pallas_interpret", lambda g, ranks: sti_fill_pallas(g, ranks, interpret=True))
+# (repro/__init__ imports this module, so the registration happens at
+# package import time.) The wrappers name their tunable params explicitly --
+# resolve_fill validates/filters fill_params against this signature, so a
+# hint meant for another variant is dropped instead of crashing inside jit.
+def _pallas_fill(g, ranks, *, block_n: int = 256, block_t: int | None = None):
+    return sti_fill_pallas(g, ranks, block_n=block_n, block_t=block_t)
+
+
+def _pallas_fill_interpret(
+    g, ranks, *, block_n: int = 256, block_t: int | None = None
+):
+    return sti_fill_pallas(
+        g, ranks, block_n=block_n, block_t=block_t, interpret=True
+    )
+
+
+register_fill_fn("pallas", _pallas_fill)
+register_fill_fn("pallas_interpret", _pallas_fill_interpret)

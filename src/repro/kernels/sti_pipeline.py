@@ -1,0 +1,197 @@
+"""Fused streaming STI valuation pipeline: distance -> rank -> g -> fill.
+
+The paper's O(t n^2) bound is only a wall-clock bound if the per-batch
+intermediates stay on the device: this module chains the tiled distance
+kernel (Pallas on TPU, the MXU-friendly XLA expansion elsewhere), the rank
+inversion, the `superdiagonal_g` recurrence, and the registered fill into
+ONE jitted step per test batch, so the (tb, n) d2/rank/u/g tensors are
+internal to a single XLA program and never round-trip HBM between stages.
+
+The (n, n) accumulator and (n,) diagonal are threaded through the step with
+buffer donation (`donate_argnums`): each batch updates them in place, peak
+device memory is O(n^2 + tb * n + fill_chunk * n^2) regardless of how many
+test batches are streamed, and the test set may live on the host (each batch
+is transferred as it is consumed). Donation is skipped on the CPU backend,
+which does not implement it (DESIGN.md Sec. 5; EXPERIMENTS.md "Fused
+pipeline" has the measurements).
+
+    from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+    phi = fused_sti_knn_interactions(x_train, y_train, x_test, y_test, k=5)
+
+`make_fused_step` exposes the donated step itself for callers that drive
+their own stream (the serving engine, shard-per-host loops).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sti_knn import (
+    _FILL_FNS,
+    InteractionMode,
+    pairwise_sq_dists,
+    ranks_from_order,
+    resolve_fill,
+    superdiagonal_g,
+)
+
+__all__ = ["fused_sti_knn_interactions", "make_fused_step", "resolve_distance"]
+
+
+def resolve_distance(
+    distance: str,
+    t: int,
+    n: int,
+    d: int,
+    *,
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> tuple[str, tuple]:
+    """Resolve "auto" | "xla" | "pallas" | "pallas_interpret" to a concrete
+    distance implementation name plus hashable static params (autotuned
+    Pallas block shapes on TPU, the XLA expansion elsewhere)."""
+    params = dict(distance_params or {})
+    if distance == "auto":
+        from repro.kernels.autotune import best_distance
+
+        name, tuned = best_distance(t, n, d, allow_tune=autotune)
+        tuned.update(params)
+        # block params are a hint for the Pallas path: dropped, not an
+        # error, when "auto" resolves to the XLA expansion off-TPU
+        params = {} if name == "xla" else tuned
+        distance = name
+    if distance not in ("xla", "pallas", "pallas_interpret"):
+        raise ValueError(f"unknown distance impl: {distance!r}")
+    if distance == "xla":
+        if params:
+            raise ValueError(
+                f"distance='xla' takes no params, got {sorted(params)}"
+            )
+    else:
+        from repro.core.sti_knn import _accepted_params
+        from repro.kernels.distance import distance_pallas
+
+        bad = set(params) - set(_accepted_params(distance_pallas, params))
+        if bad:
+            raise ValueError(
+                f"distance={distance!r} does not accept params {sorted(bad)}"
+            )
+    return distance, tuple(sorted(params.items()))
+
+
+def _distance_fn(name: str, static: tuple) -> Callable:
+    if name == "xla":
+        return pairwise_sq_dists
+    from repro.kernels.distance import distance_pallas
+
+    kw = dict(static)
+    if name == "pallas_interpret":
+        kw["interpret"] = True
+    return functools.partial(distance_pallas, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def make_fused_step(
+    k: int,
+    mode: InteractionMode = "sti",
+    fill: str = "chunked",
+    fill_static: tuple = (),
+    distance: str = "xla",
+    distance_static: tuple = (),
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Build the jitted fused step:
+
+        step(acc, diag, xb, yb, x_train, y_train) -> (acc, diag)
+
+    acc (n, n) f32 and diag (n,) f32 are donated (updated in place) on
+    backends that support donation; xb/yb is one (tb, d)/(tb,) test batch.
+    All four pipeline stages trace into the one XLA program. Cached per
+    static configuration, so repeated streaming runs reuse the executable.
+    """
+    fill_fn = functools.partial(_FILL_FNS[fill], **dict(fill_static))
+    dist_fn = _distance_fn(distance, distance_static)
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def step(acc, diag, xb, yb, x_train, y_train):
+        d2 = dist_fn(xb, x_train)                       # (tb, n) on-chip
+        order = jnp.argsort(d2, axis=-1, stable=True)   # (tb, n)
+        ranks = ranks_from_order(order)
+        u = (y_train[order] == yb[:, None]).astype(jnp.float32) / k
+        g = superdiagonal_g(u, k, mode=mode)            # (tb, n)
+        acc = acc + fill_fn(g, ranks)
+        diag = diag + jnp.sum(
+            (y_train[None, :] == yb[:, None]).astype(jnp.float32), axis=0
+        ) / k
+        return acc, diag
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def fused_sti_knn_interactions(
+    x_train: jnp.ndarray,
+    y_train: jnp.ndarray,
+    x_test: jnp.ndarray,
+    y_test: jnp.ndarray,
+    k: int,
+    *,
+    mode: InteractionMode = "sti",
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> jnp.ndarray:
+    """STI-KNN via the fused streaming pipeline; same contract as
+    `repro.core.sti_knn_interactions` ((n, n) matrix, diagonal = main terms).
+
+    Streams ceil(t / test_batch) donated steps; a trailing partial batch is
+    processed by a shape-specialized instance of the same step (exact -- no
+    padding of test points, so t need not divide test_batch).
+    """
+    if x_train.ndim != 2 or x_test.ndim != 2:
+        raise ValueError("features must be (num_points, dim)")
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    n, d = x_train.shape
+    t = x_test.shape[0]
+    if t < 1:
+        raise ValueError("need at least one test point")
+    tb = max(1, min(int(test_batch), t))
+    # autotune keys use the executed (tb, n) slice shape, not the total t
+    fill_name, fill_static = resolve_fill(
+        fill, n, tb, fill_params=fill_params, autotune=autotune
+    )
+    dist_name, dist_static = resolve_distance(
+        distance, tb, n, d, distance_params=distance_params, autotune=autotune
+    )
+    step = make_fused_step(
+        int(k), mode, fill_name, fill_static, dist_name, dist_static
+    )
+    acc = jnp.zeros((n, n), jnp.float32)
+    diag = jnp.zeros((n,), jnp.float32)
+    x_train = jnp.asarray(x_train)
+    y_train = jnp.asarray(y_train)
+    for start in range(0, t - t % tb, tb):
+        acc, diag = step(
+            acc, diag,
+            jnp.asarray(x_test[start : start + tb]),
+            jnp.asarray(y_test[start : start + tb]),
+            x_train, y_train,
+        )
+    rem = t % tb
+    if rem:
+        acc, diag = step(
+            acc, diag,
+            jnp.asarray(x_test[t - rem :]),
+            jnp.asarray(y_test[t - rem :]),
+            x_train, y_train,
+        )
+    phi = acc / t
+    return jnp.fill_diagonal(phi, diag / t, inplace=False)

@@ -156,7 +156,7 @@ def sti_cell(scfg, mesh: Mesh, *, unroll: bool = False):
       4. psum over (pod, data) -> every model shard holds the final block.
     Output: phi sharded P(None, 'model'); diag P(None).
     """
-    from repro.core.sti_knn import superdiagonal_g
+    from repro.core.sti_knn import ranks_from_order, superdiagonal_g
 
     n, d, k = scfg.n_train, scfg.feat_dim, scfg.k
     tc = scfg.test_chunk
@@ -175,9 +175,7 @@ def sti_cell(scfg, mesh: Mesh, *, unroll: bool = False):
             + jnp.sum(x_train * x_train, -1)[None, :]
         )
         order = jnp.argsort(d2, axis=-1, stable=True)
-        ranks = jnp.zeros_like(order).at[
-            jnp.arange(x_test.shape[0])[:, None], order
-        ].set(jnp.broadcast_to(jnp.arange(n), d2.shape))
+        ranks = ranks_from_order(order)
         u = (y_train[order] == y_test[:, None]).astype(jnp.float32) / k
         g = superdiagonal_g(u, k, mode=scfg.mode)
         r_cols = ranks[:, col_ids]  # (tc_local, n_local)

@@ -31,6 +31,15 @@ def main():
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--noise-frac", type=float, default=0.1)
     ap.add_argument("--mode", default="sti", choices=["sti", "sii"])
+    ap.add_argument("--engine", default="fused", choices=["fused", "scan"],
+                    help="fused = streaming distance->rank->g->fill pipeline "
+                         "with donated accumulators; scan = single-jit path")
+    ap.add_argument("--fill", default="auto",
+                    help="fill registry entry (auto|chunked|onehot|xla|pallas)")
+    ap.add_argument("--test-batch", type=int, default=256)
+    ap.add_argument("--autotune", action="store_true",
+                    help="time fill/block candidates for this size once and "
+                         "persist the winner in the autotune cache")
     ap.add_argument("--distributed", action="store_true",
                     help="run the shard_map production step on a local mesh")
     args = ap.parse_args()
@@ -50,11 +59,20 @@ def main():
                 x, y, xt, yt, jnp.arange(args.n, dtype=jnp.int32))
         phi = acc / args.t
         phi = jnp.fill_diagonal(phi, diag / args.t, inplace=False)
+    elif args.engine == "fused":
+        from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
+        phi = fused_sti_knn_interactions(
+            x, y, xt, yt, args.k, mode=args.mode, fill=args.fill,
+            test_batch=args.test_batch, autotune=args.autotune)
     else:
-        phi = sti_knn_interactions(x, y, xt, yt, args.k, mode=args.mode)
+        phi = sti_knn_interactions(
+            x, y, xt, yt, args.k, mode=args.mode, fill=args.fill,
+            test_batch=args.test_batch, autotune=args.autotune)
     phi = jax.block_until_ready(phi)
     dt = time.time() - t0
-    print(f"STI-KNN ({args.mode}) n={args.n} t={args.t} k={args.k}: {dt:.3f}s")
+    print(f"STI-KNN ({args.mode}/{args.engine}) "
+          f"n={args.n} t={args.t} k={args.k}: {dt:.3f}s")
 
     # efficiency axiom
     from repro.core.sti_baseline import sorted_orders

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     sti_knn_interactions,

@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import ModelConfig, init_params
 from repro.core.sti_knn import superdiagonal_g

@@ -1,0 +1,210 @@
+"""Fused streaming pipeline + extended fill registry: parity and autotuner."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (package import registers the Pallas fills)
+from repro.core.sti_knn import (
+    _FILL_FNS,
+    ranks_from_distances,
+    ranks_from_order,
+    resolve_fill,
+    sti_knn_interactions,
+    sti_knn_matrix_one_test,
+    superdiagonal_g,
+)
+from repro.core.sti_baseline import brute_force_sti
+from repro.kernels import autotune as at
+from repro.kernels.sti_pipeline import (
+    fused_sti_knn_interactions,
+    make_fused_step,
+)
+
+
+def _rand_problem(rng, n, t, dim=3, classes=2):
+    return (
+        jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, n).astype(np.int32)),
+        jnp.asarray(rng.normal(size=(t, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, t).astype(np.int32)),
+    )
+
+
+def _rand_fill_inputs(rng, t, n):
+    g = jnp.asarray(rng.normal(size=(t, n)).astype(np.float32))
+    ranks = jnp.asarray(
+        np.stack([rng.permutation(n) for _ in range(t)]).astype(np.int32)
+    )
+    return g, ranks
+
+
+# ------------------------------------------------------------ fill registry
+def test_registry_has_all_variants_at_package_import():
+    """`import repro` alone must register the Pallas fills (satellite:
+    fill="pallas" works out of the box)."""
+    assert {"xla", "chunked", "onehot", "pallas", "pallas_interpret"} <= set(
+        _FILL_FNS
+    )
+
+
+@pytest.mark.parametrize("fill,params", [
+    ("chunked", {"chunk": 1}),
+    ("chunked", {"chunk": 3}),      # t % chunk != 0 exercises padding
+    ("chunked", {"chunk": 8}),
+    ("onehot", {"chunk": 1}),
+    ("onehot", {"chunk": 2}),
+    ("pallas", {}),                 # auto-interprets off-TPU
+    ("pallas_interpret", {"block_n": 16, "block_t": 2}),
+])
+@pytest.mark.parametrize("t,n", [(1, 16), (5, 37), (8, 64)])
+def test_fill_variants_match_xla_reference(fill, params, t, n):
+    rng = np.random.default_rng(t * 1000 + n)
+    g, ranks = _rand_fill_inputs(rng, t, n)
+    want = np.asarray(_FILL_FNS["xla"](g, ranks))
+    got = np.asarray(_FILL_FNS[fill](g, ranks, **params))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_pallas_fill_through_core_matches_xla():
+    rng = np.random.default_rng(2)
+    x, y, xt, yt = _rand_problem(rng, 24, 9)
+    a = sti_knn_interactions(x, y, xt, yt, 3, fill="xla")
+    b = sti_knn_interactions(x, y, xt, yt, 3, fill="pallas")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_resolve_fill_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown fill"):
+        resolve_fill("nope", 8, 4)
+
+
+def test_rank_helpers_agree():
+    rng = np.random.default_rng(0)
+    d2 = jnp.asarray(rng.random(size=(4, 11)).astype(np.float32))
+    order = jnp.argsort(d2, axis=-1, stable=True)
+    r1 = ranks_from_distances(d2)
+    r2 = ranks_from_order(order)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    # ranks invert the order permutation
+    np.testing.assert_array_equal(
+        np.take_along_axis(np.asarray(r1), np.asarray(order), 1),
+        np.broadcast_to(np.arange(11), (4, 11)),
+    )
+
+
+# ------------------------------------------------------------ fused pipeline
+@pytest.mark.parametrize("mode", ["sti", "sii"])
+@pytest.mark.parametrize("n,t,tb", [
+    (33, 17, 4),    # non-divisible t/tb and ragged n
+    (16, 8, 8),     # single full batch
+    (10, 3, 256),   # tb > t
+])
+def test_fused_matches_scan_engine(mode, n, t, tb):
+    rng = np.random.default_rng(n * 10 + t)
+    x, y, xt, yt = _rand_problem(rng, n, t, classes=3)
+    want = sti_knn_interactions(x, y, xt, yt, 4, mode=mode, fill="xla")
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, 4, mode=mode, test_batch=tb
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("fill,params", [
+    ("chunked", {"chunk": 2}),
+    ("onehot", {}),
+    ("pallas", {}),
+])
+def test_fused_fill_variants(fill, params):
+    rng = np.random.default_rng(7)
+    x, y, xt, yt = _rand_problem(rng, 21, 11)
+    want = sti_knn_interactions(x, y, xt, yt, 3, fill="xla")
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, 3, test_batch=4, fill=fill, fill_params=params
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("n,t,k", [(8, 3, 2), (7, 2, 3)])
+def test_fused_matches_bruteforce(n, t, k):
+    rng = np.random.default_rng(n * 100 + t * 10 + k)
+    x, y, xt, yt = _rand_problem(rng, n, t, dim=2)
+    want = brute_force_sti(
+        np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), k
+    )
+    got = np.asarray(fused_sti_knn_interactions(x, y, xt, yt, k, test_batch=2))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_fused_single_test_point_matches_alg1():
+    """For t=1 the off-diagonal of the fused output is Alg. 1's one-test
+    matrix in train coordinates."""
+    rng = np.random.default_rng(5)
+    n, k = 12, 3
+    x, y, xt, yt = _rand_problem(rng, n, 1)
+    d2 = jnp.sum((x - xt[0]) ** 2, axis=-1)[None, :]
+    order = np.asarray(jnp.argsort(d2, axis=-1, stable=True))[0]
+    u_sorted = (np.asarray(y)[order] == int(yt[0])).astype(np.float32) / k
+    m_sorted = np.asarray(sti_knn_matrix_one_test(jnp.asarray(u_sorted), k))
+    want = np.zeros((n, n), np.float32)
+    want[np.ix_(order, order)] = m_sorted
+    got = np.asarray(fused_sti_knn_interactions(x, y, xt, yt, k))
+    off = ~np.eye(n, dtype=bool)
+    np.testing.assert_allclose(got[off], want[off], atol=1e-5)
+
+
+def test_make_fused_step_streaming_accumulates():
+    """Driving the donated step by hand over two half-batches equals the
+    one-shot matrix (the serving-engine streaming contract)."""
+    rng = np.random.default_rng(9)
+    n, t, k = 18, 8, 3
+    x, y, xt, yt = _rand_problem(rng, n, t)
+    step = make_fused_step(k, "sti", "chunked", (("chunk", 1),))
+    acc = jnp.zeros((n, n), jnp.float32)
+    diag = jnp.zeros((n,), jnp.float32)
+    for s in range(0, t, 4):
+        acc, diag = step(acc, diag, xt[s:s + 4], yt[s:s + 4], x, y)
+    phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
+    want = sti_knn_interactions(x, y, xt, yt, k, fill="xla")
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------- autotuner
+def test_autotune_fill_caches_and_resolves(tmp_path):
+    cache = str(tmp_path / "autotune.json")
+    name, params = at.autotune_fill(32, 6, path=cache)
+    assert name in _FILL_FNS
+    data = at._load(cache)
+    assert len(data) == 1
+    (key,) = data
+    assert key.startswith("fill:")
+    assert data[key]["fill"] == name
+    assert data[key]["candidates"]
+    # bucketed lookup: nearby sizes hit the same entry
+    assert at.lookup_fill(30, 5, path=cache) == (name, params)
+    assert at.best_fill(30, 5, path=cache) == (name, params)
+    assert at.lookup_fill(300, 5, path=cache) is None
+
+
+def test_best_fill_heuristic_on_miss(tmp_path):
+    cache = str(tmp_path / "empty.json")
+    name, params = at.best_fill(64, 4, path=cache)
+    assert name in _FILL_FNS  # heuristic default, no tuning side effects
+    assert not (tmp_path / "empty.json").exists()
+
+
+def test_auto_fill_matches_reference(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "c.json"))
+    rng = np.random.default_rng(3)
+    x, y, xt, yt = _rand_problem(rng, 20, 7)
+    want = sti_knn_interactions(x, y, xt, yt, 3, fill="xla")
+    got = sti_knn_interactions(x, y, xt, yt, 3, fill="auto", autotune=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert (tmp_path / "c.json").exists()
+
+
+def test_bucket_is_pow2_envelope():
+    assert [at._bucket(x) for x in (1, 2, 3, 64, 65, 2048)] == [
+        1, 2, 4, 64, 128, 2048,
+    ]
