@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call measured on this
 host's CPU; `derived` carries the table's scientific quantity). `--json`
 additionally writes BENCH_sti_knn.json so the perf trajectory is tracked
-across PRs (EXPERIMENTS.md records the history).
+across PRs (EXPERIMENTS.md records the history); each JSON row carries the
+valuation `method` and `engine` it measured, so trajectories are comparable
+per method/engine pair.
 
   PYTHONPATH=src python -m benchmarks.run            # all
   PYTHONPATH=src python -m benchmarks.run --only baselines --json
@@ -88,21 +90,29 @@ def bench_complexity_scaling():
 # ------------------------------------------------------------ baselines:
 def bench_baselines():
     from repro.core.sti_knn import _FILL_FNS
+    from repro.core.wknn import wknn_shapley_values
     from repro.kernels.sti_pipeline import fused_sti_knn_interactions
 
     x, y, xt, yt = _problem(2048, 256)
     rows = [
-        ("knn_shapley_n2048_t256", _time(knn_shapley_values, x, y, xt, yt, 5), ""),
-        ("loo_n2048_t256", _time(loo_values, x, y, xt, yt, 5), ""),
-        ("sti_knn_n2048_t256", _time(sti_knn_interactions, x, y, xt, yt, 5), ""),
+        ("knn_shapley_n2048_t256", _time(knn_shapley_values, x, y, xt, yt, 5),
+         "", {"method": "knn_shapley"}),
+        ("wknn_n2048_t256",
+         _time(lambda: wknn_shapley_values(x, y, xt, yt, 5, weights="rbf")),
+         "weights=rbf", {"method": "wknn"}),
+        ("loo_n2048_t256", _time(loo_values, x, y, xt, yt, 5), "",
+         {"method": "loo"}),
+        ("sti_knn_n2048_t256", _time(sti_knn_interactions, x, y, xt, yt, 5),
+         "", {"method": "sti", "engine": "scan"}),
         ("sti_knn_sii_n2048_t256",
-         _time(lambda: sti_knn_interactions(x, y, xt, yt, 5, mode="sii")), ""),
+         _time(lambda: sti_knn_interactions(x, y, xt, yt, 5, mode="sii")), "",
+         {"method": "sii", "engine": "scan"}),
         # fill/distance pinned (not "auto") so rows are comparable across
         # hosts regardless of what a user's autotune cache contains
         ("sti_knn_fused_n2048_t256",
          _time(fused_sti_knn_interactions, x, y, xt, yt, 5, test_batch=64,
                fill="chunked", fill_params={"chunk": 1}, distance="xla"),
-         "fill=chunked1;distance=xla"),
+         "fill=chunked1;distance=xla", {"method": "sti", "engine": "fused"}),
     ]
     # The PR-1 perf claim: the chunked scan fill vs the seed (t, n, n)-
     # materializing XLA fill at the acceptance size (t=64, n=2048). The
@@ -226,12 +236,27 @@ def main() -> None:
     names = [args.only] if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     all_rows = []
+    # per-bench default provenance; rows may override (or extend) it with an
+    # optional 4th tuple element, e.g. {"method": "sti", "engine": "fused"}
+    bench_prov = {
+        "speedup": {"method": "sti", "engine": "scan"},
+        "complexity": {"method": "sti", "engine": "scan"},
+        "baselines": {"method": None, "engine": None},
+        "k_invariance": {"method": "sti", "engine": "scan"},
+        "mislabel": {"method": "sti", "engine": "scan"},
+        "structure": {"method": "sti", "engine": "scan"},
+        "kernels": {"method": "sti", "engine": "kernel"},
+    }
     for nm in names:
         for row in BENCHES[nm]():
             print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+            prov = dict(bench_prov.get(nm, {}))
+            if len(row) > 3:
+                prov.update(row[3])
             all_rows.append(
                 {"bench": nm, "name": row[0],
-                 "us_per_call": round(float(row[1]), 1), "derived": row[2]})
+                 "us_per_call": round(float(row[1]), 1), "derived": row[2],
+                 "method": prov.get("method"), "engine": prov.get("engine")})
     if args.json:
         payload = {
             "backend": jax.default_backend(),

@@ -14,6 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.sti_knn_paper import STIConfig
 from repro.core import sti_knn_interactions
 from repro.data import make_moons
@@ -30,7 +31,7 @@ print(f"devices: {devs}, mesh: {dict(mesh.shape)}")
 
 scfg = STIConfig(n_train=n, feat_dim=2, k=k, test_chunk=t)
 step, _, _, _ = sti_cell(scfg, mesh)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     acc, diag = jax.jit(step)(x, y, xt, yt, jnp.arange(n, dtype=jnp.int32))
 phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
 

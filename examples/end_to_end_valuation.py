@@ -5,7 +5,9 @@
      trainer (checkpointing + fault-tolerant loop);
   2. EXTRACT mean-pooled embeddings for a labeled corpus (the paper's
      "pre-trained feature extractor" pattern, Sec. 1);
-  3. VALUATE the corpus with STI-KNN and flag mislabeled examples.
+  3. VALUATE the corpus with STI-KNN via a streaming ValuationSession
+     (test batches arrive incrementally, constant accumulator memory) and
+     flag mislabeled examples from the ValuationResult artifact.
 
     PYTHONPATH=src python examples/end_to_end_valuation.py \
         --steps 300 --d-model 128   # full driver (~100M: --d-model 768)
@@ -18,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import sti_knn_interactions, analysis
+from repro.core import ValuationSession
 from repro.data import make_token_batch, flip_labels
 from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
@@ -83,12 +85,17 @@ train_toks, train_labels_clean = corpus(n, 1)
 test_toks, test_labels = corpus(t, 2)
 train_labels, flipped = flip_labels(train_labels_clean, 0.1, 2, seed=3)
 
-# ---- 3. embed + valuate ---------------------------------------------------
+# ---- 3. embed + valuate (streaming: test points arrive in batches) --------
 embed = jax.jit(lambda p, toks: model.embed(p, {"tokens": toks}))
 x_train = embed(params, train_toks)
-x_test = embed(params, test_toks)
-phi = sti_knn_interactions(x_train, train_labels, x_test, test_labels, k=5)
-scores = analysis.mislabel_scores(phi, train_labels, 2)
+sess = ValuationSession(x_train, train_labels, k=5, test_batch=32)
+for start in range(0, t, 32):
+    sess.update(embed(params, test_toks[start:start + 32]),
+                test_labels[start:start + 32])
+result = sess.finalize()
+print(f"[valuate] streamed t={result.meta['t']} through "
+      f"engine={result.meta['engine']} fill={result.meta['fill']}")
+scores = result.mislabel_scores(train_labels, 2)
 order = np.argsort(-np.asarray(scores))
 nf = int(np.asarray(flipped).sum())
 prec = float(np.asarray(flipped)[order[:nf]].mean())

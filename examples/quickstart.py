@@ -2,25 +2,31 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Computes the STI-KNN interaction matrix on the paper's Circle dataset,
-checks the efficiency axiom, and prints the in-class / out-of-class
-interaction structure (paper Fig. 3).
+Resolves the paper's STI-KNN algorithm from the valuation method registry,
+computes the interaction matrix on the Circle dataset as a `ValuationResult`
+artifact, checks the efficiency axiom, and prints the in-class /
+out-of-class interaction structure (paper Fig. 3).
 """
 
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import sti_knn_interactions, knn_shapley_values, analysis
+from repro import get_method, list_methods
 from repro.data import make_circles
 
 # 1. data: two concentric circles, 300 train / 100 test points
 x_train, y_train = make_circles(150, noise=0.08, seed=0)
 x_test, y_test = make_circles(50, noise=0.08, seed=1)
 
-# 2. the paper's algorithm: exact O(t n^2) pair-interaction matrix
-phi = sti_knn_interactions(x_train, y_train, x_test, y_test, k=5)
+# 2. the paper's algorithm, via the registry: exact O(t n^2) pair
+#    interactions, returned as a ValuationResult with provenance metadata
+print(f"registered methods: {list_methods()}")
+result = get_method("sti")(x_train, y_train, x_test, y_test, k=5)
+phi = result.interaction_matrix()
 print(f"interaction matrix: {phi.shape}, symmetric: "
       f"{bool(jnp.allclose(phi, phi.T))}")
+print(f"provenance: engine={result.meta['engine']} k={result.meta['k']} "
+      f"elapsed={result.meta['elapsed_s']}s")
 
 # 3. efficiency axiom: diag + upper triangle sums to the KNN test score
 from repro.core.sti_baseline import sorted_orders
@@ -28,16 +34,22 @@ orders = sorted_orders(np.asarray(x_train), np.asarray(x_test))
 v_n = np.mean([np.sum(np.asarray(y_train)[orders[p, :5]] == int(y_test[p])) / 5
                for p in range(len(y_test))])
 print(f"sum(phi) = {float(jnp.sum(jnp.triu(phi))):.6f}  "
-      f"v(N) = {v_n:.6f}  (efficiency axiom)")
+      f"v(N) = {v_n:.6f}  (efficiency gap "
+      f"{float(result.efficiency_gap(v_n)):.2e})")
 
 # 4. structure: in-class pairs interact negatively (redundancy), across-class
-#    pairs barely interact (paper Fig. 3)
-s = analysis.class_block_summary(phi, y_train, 2)
+#    pairs barely interact (paper Fig. 3) -- analytics are result methods now
+s = result.class_block_summary(y_train, 2)
 print(f"mean in-class interaction:  {float(jnp.mean(s.in_class_mean)):+.3e}")
 print(f"mean out-class interaction: {float(s.out_class_mean):+.3e}")
 
-# 5. the order-2 Shapley-Taylor decomposition recovers exact Shapley values
-sv = knn_shapley_values(x_train, y_train, x_test, y_test, k=5)
-agg = jnp.diag(phi) + 0.5 * (jnp.sum(phi, 1) - jnp.diag(phi))
+# 5. the order-2 Shapley-Taylor decomposition recovers exact Shapley values:
+#    result.values() aggregates phi_ii + 1/2 sum_j phi_ij
+sv = get_method("knn_shapley")(x_train, y_train, x_test, y_test, k=5)
 print(f"max |phi-aggregate - KNN-Shapley| = "
-      f"{float(jnp.max(jnp.abs(agg - sv))):.2e}")
+      f"{float(jnp.max(jnp.abs(result.values() - sv.values()))):.2e}")
+
+# 6. weighted-KNN Shapley (distance-weighted utility) ranks similarly
+wv = get_method("wknn")(x_train, y_train, x_test, y_test, k=5, weights="rbf")
+corr = np.corrcoef(np.asarray(sv.values()), np.asarray(wv.values()))[0, 1]
+print(f"wknn vs knn_shapley rank agreement (Pearson): {corr:.3f}")

@@ -1,13 +1,25 @@
 """repro: STI-KNN data valuation at pod scale (JAX + Pallas).
 
 Public API re-exports; see README.md.
+
+The valuation surface is the method registry: `get_method("sti")(...)`
+returns a `ValuationResult`; `ValuationSession` streams test points through
+the fused pipeline with constant memory. `DataValuator` remains as a thin
+back-compat wrapper.
 """
 
 from repro.core import (
     sti_knn_interactions,
     knn_shapley_values,
     loo_values,
+    wknn_shapley_values,
     analysis,
+    ValuationResult,
+    ValuationMethod,
+    ValuationSession,
+    register_method,
+    get_method,
+    list_methods,
 )
 from repro.core.valuation import DataValuator
 
@@ -22,6 +34,13 @@ __all__ = [
     "fused_sti_knn_interactions",
     "knn_shapley_values",
     "loo_values",
+    "wknn_shapley_values",
     "analysis",
     "DataValuator",
+    "ValuationResult",
+    "ValuationMethod",
+    "ValuationSession",
+    "register_method",
+    "get_method",
+    "list_methods",
 ]

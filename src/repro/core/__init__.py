@@ -10,7 +10,16 @@ from repro.core.sti_knn import (
 )
 from repro.core.knn_shapley import knn_shapley_values
 from repro.core.loo import loo_values
+from repro.core.wknn import wknn_shapley_values
 from repro.core import analysis
+from repro.core.results import ValuationResult
+from repro.core.methods import (
+    ValuationMethod,
+    register_method,
+    get_method,
+    list_methods,
+)
+from repro.core.session import ValuationSession
 
 __all__ = [
     "sti_knn_interactions",
@@ -23,5 +32,12 @@ __all__ = [
     "resolve_fill",
     "knn_shapley_values",
     "loo_values",
+    "wknn_shapley_values",
     "analysis",
+    "ValuationResult",
+    "ValuationMethod",
+    "register_method",
+    "get_method",
+    "list_methods",
+    "ValuationSession",
 ]

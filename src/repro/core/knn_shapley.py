@@ -45,6 +45,8 @@ def knn_shapley_values(
     """(n,) Shapley values of the KNN utility, averaged over the test set."""
     n = x_train.shape[0]
     t = x_test.shape[0]
+    if t < 1:
+        raise ValueError("need at least one test point")
 
     def body(acc, batch):
         xb, yb = batch

@@ -1,0 +1,247 @@
+"""Valuation method registry: one protocol, many algorithms, one artifact.
+
+Mirrors the fill registry in `repro.core.sti_knn`: every KNN valuation
+algorithm registers under a name and implements the `ValuationMethod`
+protocol --
+
+    method = get_method("sti")
+    result = method(x_train, y_train, x_test, y_test, k=5, engine="fused")
+    result.values(); result.mislabel_scores(y_train, 2); result.save(path)
+
+-- so engines (fused, scan, distributed), launchers, benchmarks, and the
+serving layer dispatch by name instead of hand-rolled branches. Registered
+methods (all return `ValuationResult`):
+
+  "sti"          paper's Shapley-Taylor pair interactions, O(t n^2)
+  "sii"          Grabisch-Roubens interaction index, same engines
+  "knn_shapley"  exact per-point KNN-Shapley (Jia et al.), O(t n log n)
+  "wknn"         weighted soft-label KNN-Shapley (arXiv 2401.11103 family)
+  "loo"          leave-one-out values
+
+Interaction methods accept `engine=` ("fused" | "scan" | "distributed"):
+fused streams donated-accumulator steps through the distance->rank->g->fill
+pipeline, scan is the single-jit lax.scan path, distributed runs the
+shard_map production cell over a device mesh (routed through repro.compat so
+it works on jax 0.4.x too).
+"""
+
+from __future__ import annotations
+
+import inspect
+import time
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.results import ValuationResult
+
+__all__ = [
+    "ValuationMethod",
+    "register_method",
+    "get_method",
+    "list_methods",
+    "INTERACTION_ENGINES",
+]
+
+INTERACTION_ENGINES = ("fused", "scan", "distributed")
+
+
+@runtime_checkable
+class ValuationMethod(Protocol):
+    """A named valuation algorithm: arrays in, `ValuationResult` out."""
+
+    name: str
+
+    def __call__(self, x_train, y_train, x_test, y_test, *,
+                 k: int = 5, **opts) -> ValuationResult: ...
+
+
+_METHODS: dict[str, ValuationMethod] = {}
+
+
+def register_method(name: str, method: ValuationMethod) -> None:
+    """Register a valuation method (e.g. a new algorithm or an engine-pinned
+    variant). `method(x_train, y_train, x_test, y_test, *, k, **opts)` must
+    return a `ValuationResult`."""
+    _METHODS[name] = method
+
+
+def get_method(name: str) -> ValuationMethod:
+    if name not in _METHODS:
+        raise ValueError(
+            f"unknown valuation method {name!r}; registered: "
+            f"{sorted(_METHODS)}"
+        )
+    return _METHODS[name]
+
+
+def list_methods() -> list[str]:
+    return sorted(_METHODS)
+
+
+def _base_meta(x_train, x_test, k: int) -> dict:
+    return {
+        "k": int(k),
+        "n": int(x_train.shape[0]),
+        "t": int(x_test.shape[0]),
+        "d": int(x_train.shape[1]) if x_train.ndim == 2 else None,
+        "backend": jax.default_backend(),
+    }
+
+
+def _keyword_options(fn: Callable) -> frozenset:
+    """Names of the keyword-only options `fn` accepts (jit-wrapped functions
+    keep their signature via functools.wraps)."""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return frozenset()
+    return frozenset(
+        p.name for p in sig.parameters.values()
+        if p.kind is inspect.Parameter.KEYWORD_ONLY
+    )
+
+
+class _InteractionMethod:
+    """"sti" / "sii": the paper's O(t n^2) pair-interaction matrix."""
+
+    accepted_options = frozenset({
+        "engine", "test_batch", "fill", "fill_params", "distance",
+        "distance_params", "autotune", "mesh",
+    })
+
+    def __init__(self, name: str, mode: str):
+        self.name = name
+        self.mode = mode
+
+    def __call__(self, x_train, y_train, x_test, y_test, *, k: int = 5,
+                 engine: str = "fused", test_batch: int = 256,
+                 fill: str = "auto", fill_params: Optional[dict] = None,
+                 distance: str = "auto",
+                 distance_params: Optional[dict] = None,
+                 autotune: bool = False, mesh=None) -> ValuationResult:
+        if engine not in INTERACTION_ENGINES:
+            raise ValueError(
+                f"unknown engine {engine!r}; choose from {INTERACTION_ENGINES}"
+            )
+        meta = _base_meta(x_train, x_test, k)
+        meta.update(method=self.name, mode=self.mode, engine=engine)
+        # provenance must name the RESOLVED implementations, not "auto":
+        # resolve after the run (an autotune=True run populates the cache
+        # first, so this lookup sees the same winner the run used)
+        tb = max(1, min(int(test_batch), int(x_test.shape[0])))
+        t0 = time.perf_counter()
+        if engine == "fused":
+            from repro.kernels.sti_pipeline import (
+                fused_sti_knn_interactions, prepare_fused_step)
+
+            phi = fused_sti_knn_interactions(
+                x_train, y_train, x_test, y_test, k, mode=self.mode,
+                test_batch=test_batch, fill=fill, fill_params=fill_params,
+                distance=distance, distance_params=distance_params,
+                autotune=autotune,
+            )
+            _, resolved = prepare_fused_step(
+                x_train.shape[0], x_train.shape[1], k, mode=self.mode,
+                test_batch=tb, fill=fill, fill_params=fill_params,
+                distance=distance, distance_params=distance_params,
+            )
+            meta.update(test_batch=test_batch, **resolved)
+        elif engine == "scan":
+            from repro.core.sti_knn import resolve_fill, sti_knn_interactions
+
+            phi = sti_knn_interactions(
+                x_train, y_train, x_test, y_test, k, mode=self.mode,
+                test_batch=test_batch, fill=fill, fill_params=fill_params,
+                autotune=autotune,
+            )
+            meta.update(
+                fill=resolve_fill(fill, x_train.shape[0], tb,
+                                  fill_params=fill_params)[0],
+                test_batch=test_batch,
+            )
+        else:  # distributed
+            phi, mesh_shape = _distributed_interactions(
+                x_train, y_train, x_test, y_test, k, self.mode, mesh
+            )
+            meta.update(mesh=mesh_shape)
+        phi = jax.block_until_ready(phi)
+        meta["elapsed_s"] = round(time.perf_counter() - t0, 4)
+        return ValuationResult(method=self.name, phi=phi, meta=meta)
+
+
+def _distributed_interactions(x_train, y_train, x_test, y_test, k, mode,
+                              mesh):
+    """Run the shard_map production cell (launch.specs.sti_cell) on `mesh`
+    (default: all local devices). Test points shard over 'data', phi over
+    'model' column blocks; one psum combines the partial sums."""
+    from repro import compat
+    from repro.configs.sti_knn_paper import STIConfig
+    from repro.launch.mesh import make_local_mesh
+    from repro.launch.specs import sti_cell
+
+    n, d = x_train.shape
+    t = x_test.shape[0]
+    if mesh is None:
+        mesh = make_local_mesh()
+    scfg = STIConfig(n_train=n, feat_dim=d, k=k, test_chunk=t, mode=mode)
+    step, _, _, _ = sti_cell(scfg, mesh)
+    with compat.set_mesh(mesh):
+        acc, diag = jax.jit(step)(
+            jnp.asarray(x_train), jnp.asarray(y_train),
+            jnp.asarray(x_test), jnp.asarray(y_test),
+            jnp.arange(n, dtype=jnp.int32),
+        )
+    phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
+    return phi, dict(mesh.shape)
+
+
+class _PointValueMethod:
+    """Per-point value methods ("knn_shapley", "loo", "wknn")."""
+
+    def __init__(self, name: str, fn: Callable, **static_opts):
+        self.name = name
+        self._fn = fn
+        self._static = static_opts
+        self.accepted_options = _keyword_options(fn)
+
+    def __call__(self, x_train, y_train, x_test, y_test, *, k: int = 5,
+                 **opts) -> ValuationResult:
+        bad = set(opts) - self.accepted_options
+        if bad:
+            raise ValueError(
+                f"method {self.name!r} does not accept options "
+                f"{sorted(bad)}; accepted: {sorted(self.accepted_options)}"
+            )
+        meta = _base_meta(x_train, x_test, k)
+        kw = dict(self._static, **opts)
+        meta.update(method=self.name, **{k_: v for k_, v in kw.items()
+                                         if isinstance(v, (str, int, float))})
+        t0 = time.perf_counter()
+        values = jax.block_until_ready(
+            self._fn(x_train, y_train, x_test, y_test, k, **kw)
+        )
+        meta["elapsed_s"] = round(time.perf_counter() - t0, 4)
+        return ValuationResult(
+            method=self.name, point_values=values, meta=meta
+        )
+
+
+def _register_builtins() -> None:
+    from repro.core.knn_shapley import knn_shapley_values
+    from repro.core.loo import loo_values
+    from repro.core.wknn import wknn_shapley_values
+
+    register_method("sti", _InteractionMethod("sti", mode="sti"))
+    register_method("sii", _InteractionMethod("sii", mode="sii"))
+    register_method(
+        "knn_shapley", _PointValueMethod("knn_shapley", knn_shapley_values)
+    )
+    register_method("loo", _PointValueMethod("loo", loo_values))
+    register_method(
+        "wknn", _PointValueMethod("wknn", wknn_shapley_values)
+    )
+
+
+_register_builtins()

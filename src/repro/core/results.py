@@ -1,0 +1,180 @@
+"""`ValuationResult`: the artifact every valuation method returns.
+
+The seed API returned bare matrices/vectors, losing the provenance (k, mode,
+engine, fill, timings) that analytics, caching, and benchmarking need. A
+`ValuationResult` carries
+
+  * `phi`   -- (n, n) interaction matrix, diagonal = main terms (interaction
+               methods: "sti" / "sii"), or None;
+  * `point_values` -- (n,) per-point values (value methods: "knn_shapley",
+               "loo", "wknn"), or None;
+  * `meta`  -- JSON-able provenance dict (method, k, mode, engine, fill,
+               distance, n/t/d, elapsed_s, backend, ...).
+
+The paper's analytics (`repro.core.analysis`) are exposed as methods so
+callers stop re-threading labels/matrices through free functions, and
+`save()`/`load()` persist the artifact as `<path>.npz` (arrays) plus
+`<path>.json` (human-readable metadata sidecar).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import analysis
+
+__all__ = ["ValuationResult"]
+
+
+def _jsonable(obj):
+    """Best-effort JSON coercion for metadata values."""
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return str(obj)
+
+
+@dataclass(frozen=True)
+class ValuationResult:
+    """Output artifact of one valuation run (see module docstring)."""
+
+    method: str
+    phi: Optional[jnp.ndarray] = None            # (n, n), diag = main terms
+    point_values: Optional[jnp.ndarray] = None   # (n,)
+    meta: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.phi is None and self.point_values is None:
+            raise ValueError(
+                "ValuationResult needs phi and/or point_values"
+            )
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def n(self) -> int:
+        a = self.phi if self.phi is not None else self.point_values
+        return int(a.shape[0])
+
+    def values(self) -> jnp.ndarray:
+        """(n,) per-point values.
+
+        Value methods return them directly; for interaction methods this is
+        the order-2 Shapley-Taylor aggregate phi_ii + 1/2 sum_{j!=i} phi_ij,
+        which for mode="sti" equals the exact KNN-Shapley value (tested
+        identity, see test_shapley_taylor_aggregation_identity).
+        """
+        if self.point_values is not None:
+            return self.point_values
+        d = jnp.diag(self.phi)
+        return d + 0.5 * (jnp.sum(self.phi, axis=1) - d)
+
+    def interaction_matrix(self) -> jnp.ndarray:
+        if self.phi is None:
+            raise ValueError(
+                f"method {self.method!r} produced per-point values only -- "
+                "no interaction matrix (use an interaction method: sti/sii)"
+            )
+        return self.phi
+
+    # ------------------------------------------------------------- analytics
+    def efficiency_gap(self, test_accuracy) -> jnp.ndarray:
+        """|value mass - v(N)|: the STI efficiency axiom for interaction
+        results, the Shapley efficiency axiom for per-point results."""
+        if self.phi is not None:
+            return analysis.efficiency_gap(self.phi, test_accuracy)
+        return jnp.abs(jnp.sum(self.point_values) - test_accuracy)
+
+    def mislabel_scores(self, labels, num_classes: int) -> jnp.ndarray:
+        """Per-train-point mislabel suspicion, higher = more suspect.
+
+        Interaction results use the paper's Fig. 5 pattern analysis; value
+        results fall back to -values() (low value flags suspects)."""
+        if self.phi is not None:
+            return analysis.mislabel_scores(self.phi, labels, num_classes)
+        return -self.point_values
+
+    def class_block_summary(self, labels, num_classes: int):
+        return analysis.class_block_summary(
+            self.interaction_matrix(), labels, num_classes
+        )
+
+    def keep_order(self) -> jnp.ndarray:
+        """Indices ordered most-valuable first (summarization use case)."""
+        return analysis.summarize_keep_order(self.values())
+
+    def summary(self) -> dict:
+        """Compact JSON-able digest: provenance + value statistics."""
+        v = np.asarray(self.values())
+        out = {
+            "method": self.method,
+            "n": self.n,
+            "has_interactions": self.phi is not None,
+            "values_min": float(v.min()),
+            "values_mean": float(v.mean()),
+            "values_max": float(v.max()),
+        }
+        if self.phi is not None:
+            p = np.asarray(self.phi)
+            off = p[~np.eye(p.shape[0], dtype=bool)]
+            out["interaction_off_diag_mean"] = float(off.mean())
+            out["main_term_mean"] = float(np.diag(p).mean())
+        out.update(_jsonable(self.meta))
+        return out
+
+    # ----------------------------------------------------------- persistence
+    def save(self, path) -> Path:
+        """Write `<path>.npz` (arrays) + `<path>.json` (metadata).
+
+        Returns the npz path. `path` may include or omit the .npz suffix.
+        """
+        base = Path(path)
+        if base.suffix == ".npz":
+            base = base.with_suffix("")
+        arrays = {}
+        if self.phi is not None:
+            arrays["phi"] = np.asarray(self.phi)
+        if self.point_values is not None:
+            arrays["point_values"] = np.asarray(self.point_values)
+        npz = base.with_suffix(".npz")
+        npz.parent.mkdir(parents=True, exist_ok=True)
+        np.savez_compressed(npz, **arrays)
+        base.with_suffix(".json").write_text(
+            json.dumps(
+                {"method": self.method, "arrays": sorted(arrays),
+                 "meta": _jsonable(self.meta)},
+                indent=1,
+            )
+        )
+        return npz
+
+    @classmethod
+    def load(cls, path) -> "ValuationResult":
+        base = Path(path)
+        if base.suffix == ".npz":
+            base = base.with_suffix("")
+        head = json.loads(base.with_suffix(".json").read_text())
+        with np.load(base.with_suffix(".npz")) as z:
+            arrays = {k: jnp.asarray(z[k]) for k in z.files}
+        return cls(
+            method=head["method"],
+            phi=arrays.get("phi"),
+            point_values=arrays.get("point_values"),
+            meta=head.get("meta", {}),
+        )
+
+    def replace(self, **kw) -> "ValuationResult":
+        return dataclasses.replace(self, **kw)

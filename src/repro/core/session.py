@@ -1,0 +1,178 @@
+"""`ValuationSession`: constant-memory streaming valuation over unbounded t.
+
+The fused pipeline's donated-accumulator step makes the STI-KNN computation
+a pure fold over test batches: (acc, diag) <- step(acc, diag, xb, yb, ...).
+A session owns that fold so test points can arrive incrementally (online
+valuation, a test set that does not fit in memory, or a service endpoint):
+
+    sess = ValuationSession(x_train, y_train, k=5)
+    for xb, yb in test_stream:
+        sess.update(xb, yb)
+    result = sess.finalize()          # ValuationResult, phi averaged over t
+
+Peak device memory is O(n^2 + test_batch * n) regardless of how many
+updates arrive. `finalize()` is a snapshot -- the session keeps accepting
+updates afterwards. `checkpoint()` / `ValuationSession.restore()` persist
+the partial sums (npz) so a long-running valuation survives preemption:
+the accumulators are plain sums, so a restored session continues exactly
+where the saved one stopped.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Callable, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.results import ValuationResult
+
+__all__ = ["ValuationSession"]
+
+_MODES = ("sti", "sii")
+
+
+class ValuationSession:
+    """Streaming STI/SII valuation against a fixed training set."""
+
+    def __init__(self, x_train, y_train, *, k: int = 5, mode: str = "sti",
+                 test_batch: int = 256, fill: str = "auto",
+                 fill_params: Optional[dict] = None, distance: str = "auto",
+                 distance_params: Optional[dict] = None,
+                 autotune: bool = False,
+                 embed_fn: Optional[Callable] = None):
+        if mode not in _MODES:
+            raise ValueError(f"unknown mode {mode!r}; choose from {_MODES}")
+        if k < 1:
+            raise ValueError("k must be >= 1")
+        self._embed = embed_fn or (lambda x: x)
+        self.x_train = jnp.asarray(self._embed(jnp.asarray(x_train)))
+        self.y_train = jnp.asarray(y_train)
+        if self.x_train.ndim != 2:
+            raise ValueError("train features must be (num_points, dim)")
+        n, d = self.x_train.shape
+        self.k = int(k)
+        self.mode = mode
+        self.test_batch = max(1, int(test_batch))
+
+        from repro.kernels.sti_pipeline import prepare_fused_step
+
+        self._step, self._resolved = prepare_fused_step(
+            n, d, k, mode=mode, test_batch=self.test_batch, fill=fill,
+            fill_params=fill_params, distance=distance,
+            distance_params=distance_params, autotune=autotune,
+        )
+        self._acc = jnp.zeros((n, n), jnp.float32)
+        self._diag = jnp.zeros((n,), jnp.float32)
+        self._t = 0
+
+    # -------------------------------------------------------------- updates
+    @property
+    def t_seen(self) -> int:
+        """Number of test points consumed so far."""
+        return self._t
+
+    def update(self, x_test_batch, y_test_batch) -> "ValuationSession":
+        """Fold one batch of test points into the accumulators.
+
+        Batches of any size: full `test_batch` slices run through the cached
+        donated step; a trailing partial slice runs a shape-specialized
+        instance of the same program. Returns self (chainable).
+        """
+        xb = jnp.asarray(self._embed(jnp.asarray(x_test_batch)))
+        yb = jnp.asarray(y_test_batch)
+        if xb.ndim == 1:  # a single test point
+            xb = xb[None, :]
+            yb = jnp.reshape(yb, (1,))
+        if xb.ndim != 2 or xb.shape[1] != self.x_train.shape[1]:
+            raise ValueError(
+                f"test batch must be (b, {self.x_train.shape[1]}), "
+                f"got {xb.shape}"
+            )
+        b = xb.shape[0]
+        for start in range(0, b, self.test_batch):
+            sl = slice(start, min(start + self.test_batch, b))
+            self._acc, self._diag = self._step(
+                self._acc, self._diag, xb[sl], yb[sl],
+                self.x_train, self.y_train,
+            )
+        self._t += b
+        return self
+
+    # ------------------------------------------------------------- results
+    def finalize(self) -> ValuationResult:
+        """Snapshot the running mean as a `ValuationResult` (the session
+        remains live; later updates refine the next finalize)."""
+        if self._t == 0:
+            raise ValueError("no test points seen: call update() first")
+        phi = self._acc / self._t
+        phi = jnp.fill_diagonal(phi, self._diag / self._t, inplace=False)
+        meta = {
+            "method": self.mode,
+            "mode": self.mode,
+            "engine": "session",
+            "k": self.k,
+            "n": int(self.x_train.shape[0]),
+            "t": self._t,
+            "d": int(self.x_train.shape[1]),
+            "test_batch": self.test_batch,
+            "backend": jax.default_backend(),
+            **self._resolved,
+        }
+        return ValuationResult(method=self.mode, phi=phi, meta=meta)
+
+    # --------------------------------------------------------- persistence
+    def checkpoint(self, path) -> Path:
+        """Persist the partial sums + config to `<path>.npz`."""
+        base = Path(path)
+        if base.suffix == ".npz":
+            base = base.with_suffix("")
+        base.parent.mkdir(parents=True, exist_ok=True)
+        cfg = {
+            "k": self.k, "mode": self.mode, "test_batch": self.test_batch,
+            "t": self._t, "resolved": self._resolved,
+        }
+        out = base.with_suffix(".npz")
+        np.savez_compressed(
+            out,
+            acc=np.asarray(self._acc),
+            diag=np.asarray(self._diag),
+            config=np.asarray(json.dumps(cfg)),
+        )
+        return out
+
+    @classmethod
+    def restore(cls, path, x_train, y_train, *,
+                embed_fn: Optional[Callable] = None,
+                **session_opts) -> "ValuationSession":
+        """Rebuild a session from `checkpoint()` output plus the (fixed)
+        training set; continues exactly where the saved session stopped."""
+        base = Path(path)
+        if base.suffix != ".npz":
+            base = base.with_suffix(".npz")
+        with np.load(base) as z:
+            acc = z["acc"]
+            diag = z["diag"]
+            cfg = json.loads(str(z["config"]))
+        # default to the checkpoint's RESOLVED fill/distance so the restored
+        # session runs the same (possibly autotuned) implementations; the
+        # caller may override, e.g. when restoring on a different backend
+        for opt in ("fill", "distance"):
+            if opt in cfg.get("resolved", {}):
+                session_opts.setdefault(opt, cfg["resolved"][opt])
+        sess = cls(
+            x_train, y_train, k=cfg["k"], mode=cfg["mode"],
+            test_batch=cfg["test_batch"], embed_fn=embed_fn, **session_opts,
+        )
+        if acc.shape[0] != sess.x_train.shape[0]:
+            raise ValueError(
+                f"checkpoint is for n={acc.shape[0]} train points, "
+                f"got n={sess.x_train.shape[0]}"
+            )
+        sess._acc = jnp.asarray(acc)
+        sess._diag = jnp.asarray(diag)
+        sess._t = int(cfg["t"])
+        return sess

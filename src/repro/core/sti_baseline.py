@@ -18,9 +18,11 @@ import numpy as np
 
 __all__ = [
     "knn_utility_table",
+    "weighted_knn_utility_table",
     "brute_force_sti",
     "brute_force_sii",
     "brute_force_shapley",
+    "brute_force_wknn_shapley",
     "sorted_orders",
 ]
 
@@ -62,6 +64,80 @@ def knn_utility_table(
                     break
         table[m] = hits / k
     return table
+
+
+def weighted_knn_utility_table(
+    order: np.ndarray, contrib: np.ndarray, k: int
+) -> np.ndarray:
+    """v(S) = (1/k) sum of `contrib` over the k nearest members of S, for
+    every subset S (bitmask over ORIGINAL ids) of one test point.
+
+    Generalizes `knn_utility_table` from 0/1 label matches to arbitrary
+    per-point contributions (the soft-label weighted KNN utility of
+    repro.core.wknn with contrib[j] = w_j * 1[y_j == y_test])."""
+    n = order.shape[0]
+    table = np.zeros(2**n, dtype=np.float64)
+    for m in range(1, 2**n):
+        cnt = 0
+        tot = 0.0
+        for j in order:  # closest first
+            if m >> int(j) & 1:
+                tot += contrib[j]
+                cnt += 1
+                if cnt == k:
+                    break
+        table[m] = tot / k
+    return table
+
+
+def _shapley_from_table(table: np.ndarray, n: int) -> np.ndarray:
+    """Classical Shapley values from a full 2^n utility table."""
+    out = np.zeros(n, dtype=np.float64)
+    w = np.array([1.0 / (n * comb(n - 1, s)) for s in range(n)])
+    for i in range(n):
+        bit = 1 << i
+        rest = [b for b in range(n) if b != i]
+        for sub in range(2 ** (n - 1)):
+            m = 0
+            s = 0
+            for pos, b in enumerate(rest):
+                if sub >> pos & 1:
+                    m |= 1 << b
+                    s += 1
+            out[i] += w[s] * (table[m | bit] - table[m])
+    return out
+
+
+def brute_force_wknn_shapley(
+    x_train, y_train, x_test, y_test, k, *, weights: str = "rbf"
+) -> np.ndarray:
+    """O(t n 2^n) oracle for the soft-label *weighted* KNN utility
+    (repro.core.wknn). Weights are recomputed here in numpy with the same
+    formulas so the oracle shares no code with the fast path."""
+    n = x_train.shape[0]
+    t = x_test.shape[0]
+    orders = sorted_orders(x_train, x_test)
+    d2 = (
+        np.sum(x_test**2, -1)[:, None]
+        - 2.0 * x_test @ x_train.T
+        + np.sum(x_train**2, -1)[None, :]
+    )
+    d2 = np.maximum(d2.astype(np.float64), 0.0)
+    if weights == "rbf":
+        sigma2 = np.maximum(d2.mean(-1, keepdims=True), 1e-12)
+        w = np.exp(-d2 / (2.0 * sigma2))
+    elif weights == "inverse":
+        w = 1.0 / (1.0 + np.sqrt(d2))
+    elif weights == "uniform":
+        w = np.ones_like(d2)
+    else:
+        raise ValueError(f"unknown weight kind {weights!r}")
+    out = np.zeros(n, dtype=np.float64)
+    for p in range(t):
+        contrib = w[p] * (np.asarray(y_train) == y_test[p])
+        table = weighted_knn_utility_table(orders[p], contrib, k)
+        out += _shapley_from_table(table, n)
+    return out / t
 
 
 def _pair_interaction(
@@ -136,19 +212,8 @@ def brute_force_shapley(x_train, y_train, x_test, y_test, k) -> np.ndarray:
     t = x_test.shape[0]
     orders = sorted_orders(x_train, x_test)
     out = np.zeros(n, dtype=np.float64)
-    w = np.array([1.0 / (n * comb(n - 1, s)) for s in range(n)])
     for p in range(t):
         match = np.asarray(y_train == y_test[p])
         table = knn_utility_table(orders[p], match, k)
-        for i in range(n):
-            bit = 1 << i
-            rest = [b for b in range(n) if b != i]
-            for sub in range(2 ** (n - 1)):
-                m = 0
-                s = 0
-                for pos, b in enumerate(rest):
-                    if sub >> pos & 1:
-                        m |= 1 << b
-                        s += 1
-                out[i] += w[s] * (table[m | bit] - table[m])
+        out += _shapley_from_table(table, n)
     return out / t

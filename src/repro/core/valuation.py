@@ -1,9 +1,13 @@
 """High-level data-valuation API, single-host and distributed.
 
-`DataValuator` wraps the paper's algorithms behind one object; the
-distributed path shards test points over the ('pod', 'data') mesh axes and
-the n x n interaction matrix over 'model' column blocks, with a single psum
-at the end (see DESIGN.md Sec. 4).
+`DataValuator` is a thin back-compat wrapper over the valuation method
+registry (`repro.core.methods`): `run()` returns the full
+`ValuationResult` artifact, the legacy accessors (`interaction_matrix`,
+`shapley_values`, `loo`) keep returning bare arrays. New code should use
+`get_method(name)(...)` / `ValuationSession` directly. The distributed
+pjit step at the bottom shards test points over the ('pod', 'data') mesh
+axes and the n x n interaction matrix over 'model' column blocks, with a
+single psum at the end (see DESIGN.md Sec. 4).
 """
 
 from __future__ import annotations
@@ -16,27 +20,28 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.methods import INTERACTION_ENGINES, get_method, list_methods
+from repro.core.results import ValuationResult
+from repro.core.session import ValuationSession
 from repro.core.sti_knn import (
     pairwise_sq_dists,
     ranks_from_order,
-    sti_knn_interactions,
     superdiagonal_g,
 )
-from repro.core.knn_shapley import knn_shapley_values
-from repro.core.loo import loo_values
 
 __all__ = ["DataValuator", "distributed_sti_step", "make_sti_step_fn"]
 
 
 @dataclass
 class DataValuator:
-    """Valuation front-end.
+    """Valuation front-end (back-compat wrapper over the method registry).
 
     Args:
       k: KNN parameter.
       embed_fn: optional feature extractor applied to raw inputs before the
         KNN (the paper's pre-trained-backbone pattern). None = identity.
-      mode: "sti" (Shapley-Taylor) or "sii" (Grabisch-Roubens).
+      mode: name of a registered valuation method; "sti" (Shapley-Taylor)
+        and "sii" (Grabisch-Roubens) produce interaction matrices.
     """
 
     k: int = 5
@@ -46,30 +51,55 @@ class DataValuator:
     # fill="auto" consults the persistent block autotuner cache
     # (repro.kernels.autotune); engine="fused" streams donated-accumulator
     # steps through the fused distance->rank->g->fill pipeline, "scan" is the
-    # single-jit lax.scan path.
+    # single-jit lax.scan path, "distributed" the shard_map production cell.
     fill: str = "auto"
     engine: str = "fused"
+
+    def __post_init__(self):
+        # fail at construction, not deep inside superdiagonal_g: unknown
+        # method / engine names give the registered alternatives up front
+        get_method(self.mode)
+        if self.engine not in INTERACTION_ENGINES:
+            raise ValueError(
+                f"unknown engine {self.engine!r}; choose from "
+                f"{INTERACTION_ENGINES}"
+            )
+        if self.k < 1:
+            raise ValueError("k must be >= 1")
 
     def _embed(self, x):
         return x if self.embed_fn is None else self.embed_fn(x)
 
+    def run(self, x_train, y_train, x_test, y_test, *,
+            method: Optional[str] = None, **opts) -> ValuationResult:
+        """Run a registered method (default: this valuator's `mode`) on the
+        embedded features and return the full `ValuationResult`."""
+        m = get_method(method or self.mode)
+        accepted = getattr(m, "accepted_options", frozenset())
+        defaults = {"engine": self.engine, "fill": self.fill,
+                    "test_batch": self.test_batch}
+        for name, value in defaults.items():
+            if name in accepted:
+                opts.setdefault(name, value)
+        return m(
+            self._embed(x_train), y_train, self._embed(x_test), y_test,
+            k=self.k, **opts,
+        )
+
+    def session(self, x_train, y_train, **opts) -> ValuationSession:
+        """Open a streaming `ValuationSession` against this training set."""
+        opts.setdefault("k", self.k)
+        opts.setdefault("mode", self.mode)
+        opts.setdefault("test_batch", self.test_batch)
+        opts.setdefault("fill", self.fill)
+        opts.setdefault("embed_fn", self.embed_fn)
+        return ValuationSession(x_train, y_train, **opts)
+
     def interaction_matrix(self, x_train, y_train, x_test, y_test,
                            *, autotune: bool = False):
-        if self.engine == "fused":
-            from repro.kernels.sti_pipeline import fused_sti_knn_interactions
-
-            return fused_sti_knn_interactions(
-                self._embed(x_train), y_train, self._embed(x_test), y_test,
-                self.k, mode=self.mode, test_batch=self.test_batch,
-                fill=self.fill, autotune=autotune,
-            )
-        if self.engine != "scan":
-            raise ValueError(f"unknown engine: {self.engine!r}")
-        return sti_knn_interactions(
-            self._embed(x_train), y_train, self._embed(x_test), y_test,
-            self.k, mode=self.mode, test_batch=self.test_batch, fill=self.fill,
-            autotune=autotune,
-        )
+        return self.run(
+            x_train, y_train, x_test, y_test, autotune=autotune
+        ).interaction_matrix()
 
     def autotune(self, n: int, t: int, d: Optional[int] = None) -> tuple[str, dict]:
         """Pre-tune the fill (and, given the feature dim `d`, the distance
@@ -84,14 +114,12 @@ class DataValuator:
         return autotune_fill(n, t)
 
     def shapley_values(self, x_train, y_train, x_test, y_test):
-        return knn_shapley_values(
-            self._embed(x_train), y_train, self._embed(x_test), y_test, self.k
-        )
+        return self.run(
+            x_train, y_train, x_test, y_test, method="knn_shapley"
+        ).values()
 
     def loo(self, x_train, y_train, x_test, y_test):
-        return loo_values(
-            self._embed(x_train), y_train, self._embed(x_test), y_test, self.k
-        )
+        return self.run(x_train, y_train, x_test, y_test, method="loo").values()
 
 
 def _sti_step_local(x_train, y_train, x_test, y_test, k: int, mode: str):

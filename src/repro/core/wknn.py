@@ -1,0 +1,100 @@
+"""Weighted KNN-Shapley: exact Shapley values for the *soft-label weighted*
+KNN utility in O(t n log n).
+
+Weighted nearest-neighbour valuation (Wang, Mittal & Jia, arXiv 2401.11103)
+generalizes KNN-Shapley to classifiers that weight each neighbour by its
+distance. We implement the soft-label weighted utility
+
+    v(S) = (1/k) * sum_{j in topk_S} w_j * 1[y_j == y_test]
+
+which is LINEAR in the per-point contribution c_j = w_j * 1[y_j == y_test].
+Jia et al.'s KNN-Shapley recurrence (repro.core.knn_shapley) only uses that
+linearity -- its proof holds for any per-point value vector, not just the
+0/1 label match -- so the exact weighted Shapley values come from the same
+reverse-cumsum recurrence applied to c instead of m:
+
+    s_{alpha_n} = c(n)/n * min(k, n)/k
+    s_{alpha_i} = s_{alpha_{i+1}} + (c(i) - c(i+1))/k * min(k, i)/i
+
+(arXiv 2401.11103's harder *hard-label* weighted-majority utility needs the
+subset-count DP and is out of scope; the brute-force oracle in
+`repro.core.sti_baseline.brute_force_wknn_shapley` verifies this soft-label
+closed form exactly.)
+
+Weight schemes (all computed from squared distances, batch-invariant):
+  * "rbf"     w = exp(-d2 / (2 * sigma_p^2)), sigma_p^2 = mean_j d2[p, j]
+              per test point (scale-free default);
+  * "inverse" w = 1 / (1 + sqrt(d2));
+  * "uniform" w = 1  (recovers unweighted KNN-Shapley -- parity-tested).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.knn_shapley import knn_shapley_from_sorted
+from repro.core.sti_knn import pairwise_sq_dists
+
+__all__ = ["wknn_shapley_values", "distance_weights", "WEIGHT_KINDS"]
+
+WEIGHT_KINDS = ("rbf", "inverse", "uniform")
+
+
+def distance_weights(d2: jnp.ndarray, kind: str = "rbf") -> jnp.ndarray:
+    """(t, n) squared distances -> (t, n) weights in (0, 1].
+
+    Row-wise deterministic (no dependence on how test points are batched),
+    so streamed and one-shot runs agree bit-for-bit per test point.
+    """
+    if kind == "rbf":
+        sigma2 = jnp.maximum(jnp.mean(d2, axis=-1, keepdims=True), 1e-12)
+        return jnp.exp(-d2 / (2.0 * sigma2))
+    if kind == "inverse":
+        return 1.0 / (1.0 + jnp.sqrt(d2))
+    if kind == "uniform":
+        return jnp.ones_like(d2)
+    raise ValueError(
+        f"unknown weight kind {kind!r}; choose from {WEIGHT_KINDS}"
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "weights", "test_batch"))
+def wknn_shapley_values(
+    x_train, y_train, x_test, y_test, k: int, *,
+    weights: str = "rbf", test_batch: int = 512
+) -> jnp.ndarray:
+    """(n,) exact Shapley values of the soft-label weighted KNN utility,
+    averaged over the test set. `weights` is one of WEIGHT_KINDS."""
+    n = x_train.shape[0]
+    t = x_test.shape[0]
+    if t < 1:
+        raise ValueError("need at least one test point")
+
+    def body(acc, batch):
+        xb, yb = batch
+        d2 = pairwise_sq_dists(xb, x_train)
+        w = distance_weights(d2, weights)
+        order = jnp.argsort(d2, axis=-1, stable=True)
+        contrib = jnp.take_along_axis(w, order, axis=-1) * (
+            y_train[order] == yb[:, None]
+        )
+        s_sorted = knn_shapley_from_sorted(contrib, k)
+        s = jnp.zeros((xb.shape[0], n), jnp.float32).at[
+            jnp.arange(xb.shape[0])[:, None], order
+        ].set(s_sorted)
+        return acc + jnp.sum(s, axis=0), None
+
+    tb = min(test_batch, t)
+    num = t // tb
+    acc = jnp.zeros((n,), jnp.float32)
+    if num:
+        xr = x_test[: num * tb].reshape(num, tb, -1)
+        yr = y_test[: num * tb].reshape(num, tb)
+        acc, _ = jax.lax.scan(body, acc, (xr, yr))
+    rem = t - num * tb
+    if rem:
+        acc, _ = body(acc, (x_test[num * tb :], y_test[num * tb :]))
+    return acc / t

@@ -39,7 +39,12 @@ from repro.core.sti_knn import (
     superdiagonal_g,
 )
 
-__all__ = ["fused_sti_knn_interactions", "make_fused_step", "resolve_distance"]
+__all__ = [
+    "fused_sti_knn_interactions",
+    "make_fused_step",
+    "prepare_fused_step",
+    "resolve_distance",
+]
 
 
 def resolve_distance(
@@ -133,6 +138,43 @@ def make_fused_step(
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())
 
 
+def prepare_fused_step(
+    n: int,
+    d: int,
+    k: int,
+    *,
+    mode: InteractionMode = "sti",
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> tuple[Callable, dict]:
+    """Resolve fill/distance for an (n, d) train set streamed in batches of
+    `test_batch` and return `(step, resolved)`:
+
+        step(acc, diag, xb, yb, x_train, y_train) -> (acc, diag)
+
+    plus a dict naming the concrete {"fill", "distance"} implementations (for
+    result metadata). This is the per-batch unit `ValuationSession` drives for
+    unbounded test streams; `fused_sti_knn_interactions` below is the one-shot
+    wrapper over the same step.
+    """
+    tb = max(1, int(test_batch))
+    fill_name, fill_static = resolve_fill(
+        fill, n, tb, fill_params=fill_params, autotune=autotune
+    )
+    dist_name, dist_static = resolve_distance(
+        distance, tb, n, d, distance_params=distance_params, autotune=autotune
+    )
+    step = make_fused_step(
+        int(k), mode, fill_name, fill_static, dist_name, dist_static
+    )
+    resolved = {"fill": fill_name, "distance": dist_name}
+    return step, resolved
+
+
 def fused_sti_knn_interactions(
     x_train: jnp.ndarray,
     y_train: jnp.ndarray,
@@ -165,14 +207,9 @@ def fused_sti_knn_interactions(
         raise ValueError("need at least one test point")
     tb = max(1, min(int(test_batch), t))
     # autotune keys use the executed (tb, n) slice shape, not the total t
-    fill_name, fill_static = resolve_fill(
-        fill, n, tb, fill_params=fill_params, autotune=autotune
-    )
-    dist_name, dist_static = resolve_distance(
-        distance, tb, n, d, distance_params=distance_params, autotune=autotune
-    )
-    step = make_fused_step(
-        int(k), mode, fill_name, fill_static, dist_name, dist_static
+    step, _ = prepare_fused_step(
+        n, d, k, mode=mode, test_batch=tb, fill=fill, fill_params=fill_params,
+        distance=distance, distance_params=distance_params, autotune=autotune,
     )
     acc = jnp.zeros((n, n), jnp.float32)
     diag = jnp.zeros((n,), jnp.float32)

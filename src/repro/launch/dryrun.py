@@ -20,6 +20,7 @@ from pathlib import Path
 
 import jax
 
+from repro import compat
 from repro.configs.registry import ARCHS, PAPER_WORKLOAD, get_config
 from repro.configs.shapes import SHAPES, shapes_for
 from repro.launch.mesh import make_production_mesh
@@ -36,7 +37,7 @@ def _compile_lm(cfg, shape, mesh, strategy, grad_accum=1):
         lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
         tree,
         is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered = jax.jit(step, in_shardings=to_named(in_sh),
                           out_shardings=to_named(out_sh)).lower(*args)
         return lowered.compile()
@@ -62,7 +63,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         scfg = PAPER_WORKLOAD
         step, args, _, _ = SPEC.sti_cell(scfg, mesh)
         mflops = sti_model_flops(scfg)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled_mem = jax.jit(step).lower(*args).compile()
             # cost variant: small unrolled test chunk, scaled back up
             # (the per-test scan body is otherwise costed once)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import build_model
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
@@ -202,8 +203,8 @@ def sti_cell(scfg, mesh: Mesh, *, unroll: bool = False):
         P("model"),           # column ids
     )
     specs_out = (P(None, "model"), P(None))
-    step = jax.shard_map(local_step, mesh=mesh, in_specs=specs_in,
-                         out_specs=specs_out, check_vma=False)
+    step = compat.shard_map(local_step, mesh=mesh, in_specs=specs_in,
+                            out_specs=specs_out, check_vma=False)
 
     args = (
         _sds((n, d), jnp.float32),

@@ -2,9 +2,13 @@
 
   PYTHONPATH=src python -m repro.launch.valuate --n 512 --t 128 --k 5
 
-Pipeline: (synthetic or embedded) features -> STI-KNN interaction matrix
-(sharded over the local mesh via the shard_map production step) ->
-analytics (efficiency check, mislabel detection quality).
+Pipeline: (synthetic or embedded) features -> valuation method from the
+registry (any of `repro.core.list_methods()`; interaction methods run on the
+fused / scan / distributed engine) -> `ValuationResult` analytics
+(efficiency check, mislabel detection quality). `--save` persists the
+result artifact (npz + JSON metadata); `--stream` drives the same
+computation through a `ValuationSession` in test-batch increments to
+exercise the constant-memory online path.
 """
 
 from __future__ import annotations
@@ -12,16 +16,12 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.sti_knn_paper import STIConfig
-from repro.core import sti_knn_interactions, knn_shapley_values, loo_values
-from repro.core import analysis
+from repro.core import get_method, knn_shapley_values, list_methods, loo_values
+from repro.core.session import ValuationSession
 from repro.data import make_circles, flip_labels
-from repro.launch.mesh import make_local_mesh
-from repro.launch.specs import sti_cell
 
 
 def main():
@@ -30,10 +30,14 @@ def main():
     ap.add_argument("--t", type=int, default=128)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--noise-frac", type=float, default=0.1)
-    ap.add_argument("--mode", default="sti", choices=["sti", "sii"])
-    ap.add_argument("--engine", default="fused", choices=["fused", "scan"],
-                    help="fused = streaming distance->rank->g->fill pipeline "
-                         "with donated accumulators; scan = single-jit path")
+    ap.add_argument("--method", "--mode", dest="method", default="sti",
+                    help=f"registered valuation method: {list_methods()}")
+    ap.add_argument("--engine", default="fused",
+                    choices=["fused", "scan", "distributed"],
+                    help="interaction engine: fused = streaming "
+                         "distance->rank->g->fill pipeline with donated "
+                         "accumulators; scan = single-jit path; distributed "
+                         "= shard_map production cell on the local mesh")
     ap.add_argument("--fill", default="auto",
                     help="fill registry entry (auto|chunked|onehot|xla|pallas)")
     ap.add_argument("--test-batch", type=int, default=256)
@@ -41,65 +45,86 @@ def main():
                     help="time fill/block candidates for this size once and "
                          "persist the winner in the autotune cache")
     ap.add_argument("--distributed", action="store_true",
-                    help="run the shard_map production step on a local mesh")
+                    help="alias for --engine distributed")
+    ap.add_argument("--stream", action="store_true",
+                    help="drive the valuation through a streaming "
+                         "ValuationSession instead of one-shot")
+    ap.add_argument("--save", default=None, metavar="PATH",
+                    help="persist the ValuationResult to PATH.npz + PATH.json")
     args = ap.parse_args()
+    if args.distributed:
+        args.engine = "distributed"
 
     x, y_clean = make_circles(args.n // 2, noise=0.08, seed=0)
     y, flipped = flip_labels(y_clean, args.noise_frac, 2, seed=1)
     xt, yt = make_circles(args.t // 2, noise=0.08, seed=2)
+    # make_circles yields 2*(t//2) points per split: use the actual counts
+    args.n = int(x.shape[0])
+    args.t = int(xt.shape[0])
 
+    method = get_method(args.method)
+    # forward only the CLI options this method accepts (registry dispatch:
+    # new methods appear here without launcher edits)
+    accepted = getattr(method, "accepted_options", frozenset())
+    opts = {name: value for name, value in dict(
+        engine=args.engine, fill=args.fill, test_batch=args.test_batch,
+        autotune=args.autotune).items() if name in accepted}
+    # streaming runs through ValuationSession, which folds the sti/sii
+    # fused step; other methods fall back to one-shot with a note
+    stream_mode = getattr(method, "mode", None)
+    if args.stream and stream_mode not in ("sti", "sii"):
+        print(f"note: --stream needs an sti/sii interaction method; "
+              f"running {args.method} one-shot")
+    elif args.stream and args.engine != "fused":
+        print(f"note: --stream folds the fused session step; "
+              f"--engine {args.engine} ignored")
     t0 = time.time()
-    if args.distributed:
-        mesh = make_local_mesh()
-        scfg = STIConfig(n_train=args.n, feat_dim=x.shape[1], k=args.k,
-                         test_chunk=args.t, mode=args.mode)
-        step, _, _, _ = sti_cell(scfg, mesh)
-        with jax.set_mesh(mesh):
-            acc, diag = jax.jit(step)(
-                x, y, xt, yt, jnp.arange(args.n, dtype=jnp.int32))
-        phi = acc / args.t
-        phi = jnp.fill_diagonal(phi, diag / args.t, inplace=False)
-    elif args.engine == "fused":
-        from repro.kernels.sti_pipeline import fused_sti_knn_interactions
-
-        phi = fused_sti_knn_interactions(
-            x, y, xt, yt, args.k, mode=args.mode, fill=args.fill,
-            test_batch=args.test_batch, autotune=args.autotune)
+    if args.stream and stream_mode in ("sti", "sii"):
+        sess = ValuationSession(
+            x, y, k=args.k, mode=stream_mode, test_batch=args.test_batch,
+            fill=args.fill, autotune=args.autotune)
+        for start in range(0, args.t, args.test_batch):
+            sess.update(xt[start:start + args.test_batch],
+                        yt[start:start + args.test_batch])
+        result = sess.finalize()
     else:
-        phi = sti_knn_interactions(
-            x, y, xt, yt, args.k, mode=args.mode, fill=args.fill,
-            test_batch=args.test_batch, autotune=args.autotune)
-    phi = jax.block_until_ready(phi)
+        result = method(x, y, xt, yt, k=args.k, **opts)
     dt = time.time() - t0
-    print(f"STI-KNN ({args.mode}/{args.engine}) "
+    meta = result.meta
+    print(f"{args.method} ({meta.get('engine', 'direct')}) "
           f"n={args.n} t={args.t} k={args.k}: {dt:.3f}s")
 
-    # efficiency axiom
+    # efficiency axiom (v(N) is the likelihood valuation, paper's v)
     from repro.core.sti_baseline import sorted_orders
     orders = sorted_orders(np.asarray(x), np.asarray(xt))
     kk = min(args.k, args.n)
     v_n = np.mean([np.sum(np.asarray(y)[orders[p, :kk]] == int(yt[p])) / args.k
                    for p in range(args.t)])
     print(f"efficiency gap |sum(phi)-v(N)| = "
-          f"{float(analysis.efficiency_gap(phi, v_n)):.2e}")
+          f"{float(result.efficiency_gap(v_n)):.2e}")
 
     # mislabel detection quality (paper Fig. 5 use case)
-    scores = analysis.mislabel_scores(phi, y, 2)
+    scores = result.mislabel_scores(y, 2)
     order = np.argsort(-np.asarray(scores))
     n_flip = int(np.asarray(flipped).sum())
     hits = np.asarray(flipped)[order[:n_flip]].sum()
     print(f"mislabel detection: {hits}/{n_flip} flipped points in top-{n_flip}"
           f" (precision {hits/n_flip:.2f})")
 
-    sv = knn_shapley_values(x, y, xt, yt, args.k)
-    lv = loo_values(x, y, xt, yt, args.k)
-    # per-point aggregate of the interaction matrix: phi_ii + 1/2 sum_j phi_ij
-    # (the order-2 Shapley-Taylor decomposition of the Shapley value)
-    agg = np.diag(np.asarray(phi)) + 0.5 * (
-        np.asarray(phi).sum(1) - np.diag(np.asarray(phi)))
-    print(f"KNN-Shapley corr with phi aggregate: "
-          f"{np.corrcoef(np.asarray(sv), agg)[0, 1]:.3f}")
-    print(f"LOO values range: [{float(jnp.min(lv)):.4f}, {float(jnp.max(lv)):.4f}]")
+    if result.phi is not None:
+        sv = knn_shapley_values(x, y, xt, yt, args.k)
+        lv = loo_values(x, y, xt, yt, args.k)
+        # per-point aggregate of the interaction matrix (the order-2
+        # Shapley-Taylor decomposition of the Shapley value)
+        agg = np.asarray(result.values())
+        print(f"KNN-Shapley corr with phi aggregate: "
+              f"{np.corrcoef(np.asarray(sv), agg)[0, 1]:.3f}")
+        print(f"LOO values range: "
+              f"[{float(jnp.min(lv)):.4f}, {float(jnp.max(lv)):.4f}]")
+
+    if args.save:
+        p = result.save(args.save)
+        print(f"saved {p} (+ .json metadata)")
 
 
 if __name__ == "__main__":

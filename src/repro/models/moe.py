@@ -26,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import PD, ModelConfig
 
 __all__ = ["moe_desc", "apply_moe"]
@@ -55,7 +56,7 @@ def apply_moe(p, x, cfg: ModelConfig):
         da = tuple(da)
         # decode-time batches (e.g. global_batch 1) may not divide the data
         # axes: replicate tokens across data then (token count is tiny)
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_mesh()
         dp = 1
         for a in da:
             dp *= mesh.shape[a]
@@ -69,7 +70,7 @@ def apply_moe(p, x, cfg: ModelConfig):
             aux = jax.lax.pmean(aux, da + (mp,))
             return out, aux
 
-        return jax.shard_map(
+        return compat.shard_map(
             inner,
             in_specs=(P(da, None, None), P(None, None),
                       P(None, None, mp), P(None, mp, None),

@@ -27,6 +27,7 @@ def run_py(code: str, devices: int = 8, timeout: int = 900):
 def test_distributed_sti_matches_reference():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs.sti_knn_paper import STIConfig
         from repro.core import sti_knn_interactions
         from repro.data import make_moons
@@ -38,7 +39,7 @@ def test_distributed_sti_matches_reference():
         mesh = jax.make_mesh((4, 2), ("data", "model"))
         scfg = STIConfig(n_train=n, feat_dim=2, k=k, test_chunk=t)
         step, _, _, _ = sti_cell(scfg, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             acc, diag = jax.jit(step)(x, y, xt, yt,
                                       jnp.arange(n, dtype=jnp.int32))
         phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
@@ -54,6 +55,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
     unsharded step (numerics identical up to f32 reduction order)."""
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs.base import ModelConfig
         from repro.launch.specs import lm_cell
         from repro.configs.base import ShapeSpec
@@ -77,7 +79,7 @@ def test_sharded_train_step_runs_and_matches_single_device():
         to_named = lambda tree: jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
             tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             f = jax.jit(step, in_shardings=to_named(in_sh),
                         out_shardings=to_named(out_sh))
             p2, o2, metrics = f(params, opt_state, batch)
@@ -98,6 +100,7 @@ def test_fsdp_constrain_equivalence():
     """FSDP storage + use-constraints computes the same loss as TP."""
     run_py("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs.base import ModelConfig, ShapeSpec
         from repro.launch.specs import lm_cell
         from repro.models import build_model
@@ -125,7 +128,7 @@ def test_fsdp_constrain_equivalence():
                 lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
                 tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None)
             opt_state = adamw_init(params)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 f = jax.jit(step, in_shardings=to_named(in_sh),
                             out_shardings=to_named(out_sh))
                 _, _, metrics = f(params, opt_state, batch)
@@ -140,6 +143,7 @@ def test_dryrun_cell_on_local_mesh():
     small mesh/arch -- guards the launch path without the 512-device grid."""
     run_py("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.configs.base import ModelConfig, ShapeSpec
         from repro.launch.specs import lm_cell
         from repro.launch.hlo_analysis import analyze_compiled, collective_bytes
@@ -155,7 +159,7 @@ def test_dryrun_cell_on_local_mesh():
         to_named = lambda tree: jax.tree.map(
             lambda s: jax.sharding.NamedSharding(mesh, s) if s is not None else None,
             tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec) or x is None)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             compiled = jax.jit(step, in_shardings=to_named(in_sh),
                                out_shardings=to_named(out_sh)).lower(*args).compile()
         terms = analyze_compiled(compiled, 8, 1e9)

@@ -109,17 +109,19 @@ def test_prefill_decode_consistency(name):
         lambda p, bt: model._fwd(p, bt, "train"))(params, batch_full)
 
     _, caches = jax.jit(lambda p, bt: model.prefill(p, bt))(params, batch_pre)
-    # prefill caches for attention archs are (g, b, kv, s, hd); decode wants
-    # room at position s -> pad cache length by 8
+    # prefill caches for attention archs are (g, b, kv, sp, hd) with sp the
+    # prefilled length (s text tokens, + num_patches for vlm); decode wants
+    # room at position sp -> pad cache length by 8
+    offset = cfg.num_patches if cfg.family == "vlm" else 0
+    sp = s + offset
     def grow(a):
-        if a.ndim >= 4 and a.shape[-2] == s:  # kv k/v
+        if a.ndim >= 4 and a.shape[-2] == sp:  # kv k/v
             pad = [(0, 0)] * a.ndim
             pad[-2] = (0, 8)
             return jnp.pad(a, pad)
-        if a.ndim == 3 and a.shape[-1] == s:  # kv pos
+        if a.ndim == 3 and a.shape[-1] == sp:  # kv pos
             return jnp.pad(a, ((0, 0), (0, 0), (0, 8)), constant_values=2**30)
         return a
-    offset = cfg.num_patches if cfg.family == "vlm" else 0
     caches = jax.tree.map(grow, caches)
     dec_batch = {
         "tokens": toks[:, s:s + 1],

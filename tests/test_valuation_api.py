@@ -1,0 +1,274 @@
+"""Unified valuation API: method registry, ValuationResult artifact,
+streaming ValuationSession, and the weighted-KNN method."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (package import registers methods + Pallas fills)
+from repro.core import (
+    ValuationResult,
+    ValuationSession,
+    get_method,
+    knn_shapley_values,
+    list_methods,
+    register_method,
+    wknn_shapley_values,
+)
+from repro.core.sti_baseline import brute_force_wknn_shapley
+from repro.core.valuation import DataValuator
+from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
+# pin fill/distance so tests are independent of the autotune cache contents
+PIN = dict(fill="chunked", distance="xla")
+
+
+def _rand_problem(rng, n, t, dim=3, classes=2):
+    return (
+        jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, n).astype(np.int32)),
+        jnp.asarray(rng.normal(size=(t, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, t).astype(np.int32)),
+    )
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_has_builtin_methods():
+    assert {"sti", "sii", "knn_shapley", "loo", "wknn"} <= set(list_methods())
+
+
+def test_registry_unknown_name_lists_alternatives():
+    with pytest.raises(ValueError, match="knn_shapley"):
+        get_method("not-a-method")
+
+
+def test_registry_registration_and_lookup():
+    class Dummy:
+        name = "dummy_zero"
+
+        def __call__(self, x, y, xt, yt, *, k=5, **opts):
+            return ValuationResult(
+                method=self.name,
+                point_values=jnp.zeros(x.shape[0]),
+                meta={"k": k},
+            )
+
+    register_method("dummy_zero", Dummy())
+    try:
+        r = get_method("dummy_zero")(*_rand_problem(
+            np.random.default_rng(0), 6, 2), k=3)
+        assert r.method == "dummy_zero"
+        assert r.meta["k"] == 3
+        np.testing.assert_array_equal(np.asarray(r.values()), 0.0)
+    finally:
+        from repro.core.methods import _METHODS
+        _METHODS.pop("dummy_zero", None)
+
+
+def test_all_methods_return_valuation_result():
+    rng = np.random.default_rng(1)
+    x, y, xt, yt = _rand_problem(rng, 24, 8)
+    for name in ("sti", "sii", "knn_shapley", "loo", "wknn"):
+        opts = dict(PIN) if name in ("sti", "sii") else {}
+        r = get_method(name)(x, y, xt, yt, k=3, **opts)
+        assert isinstance(r, ValuationResult), name
+        assert r.method == name
+        assert r.values().shape == (24,), name
+        assert r.meta["n"] == 24 and r.meta["t"] == 8 and r.meta["k"] == 3
+        assert "elapsed_s" in r.meta, name
+        if name in ("sti", "sii"):
+            assert r.interaction_matrix().shape == (24, 24)
+            assert r.meta["engine"] == "fused"
+
+
+def test_method_rejects_unknown_options():
+    rng = np.random.default_rng(2)
+    x, y, xt, yt = _rand_problem(rng, 8, 2)
+    with pytest.raises(ValueError, match="does not accept"):
+        get_method("loo")(x, y, xt, yt, k=3, frobnicate=1)
+    with pytest.raises(ValueError, match="unknown engine"):
+        get_method("sti")(x, y, xt, yt, k=3, engine="warp")
+
+
+def test_sti_engines_agree():
+    rng = np.random.default_rng(3)
+    x, y, xt, yt = _rand_problem(rng, 32, 12)
+    fused = get_method("sti")(x, y, xt, yt, k=5, engine="fused", **PIN)
+    scan = get_method("sti")(x, y, xt, yt, k=5, engine="scan", fill="chunked")
+    np.testing.assert_allclose(
+        np.asarray(fused.phi), np.asarray(scan.phi), atol=1e-6
+    )
+
+
+# ------------------------------------------------------------------- results
+def test_result_save_load_roundtrip(tmp_path):
+    rng = np.random.default_rng(4)
+    x, y, xt, yt = _rand_problem(rng, 16, 4)
+    r = get_method("sti")(x, y, xt, yt, k=3, **PIN)
+    p = r.save(tmp_path / "artifact")
+    assert p.exists() and (tmp_path / "artifact.json").exists()
+    r2 = ValuationResult.load(p)
+    assert r2.method == "sti"
+    assert r2.meta["engine"] == "fused" and r2.meta["k"] == 3
+    np.testing.assert_array_equal(np.asarray(r.phi), np.asarray(r2.phi))
+    np.testing.assert_allclose(
+        np.asarray(r.values()), np.asarray(r2.values()), atol=1e-7
+    )
+    # value-only artifact round-trips too
+    rv = get_method("wknn")(x, y, xt, yt, k=3)
+    rv2 = ValuationResult.load(rv.save(tmp_path / "values_only"))
+    assert rv2.phi is None
+    np.testing.assert_array_equal(
+        np.asarray(rv.point_values), np.asarray(rv2.point_values)
+    )
+
+
+def test_result_values_aggregation_matches_knn_shapley():
+    """values() of an STI result is the order-2 Shapley-Taylor aggregate =
+    the exact KNN-Shapley values."""
+    rng = np.random.default_rng(5)
+    x, y, xt, yt = _rand_problem(rng, 20, 6)
+    r = get_method("sti")(x, y, xt, yt, k=4, **PIN)
+    sv = knn_shapley_values(x, y, xt, yt, 4)
+    np.testing.assert_allclose(
+        np.asarray(r.values()), np.asarray(sv), atol=2e-5
+    )
+
+
+def test_result_summary_and_analytics():
+    rng = np.random.default_rng(6)
+    x, y, xt, yt = _rand_problem(rng, 16, 4)
+    r = get_method("sti")(x, y, xt, yt, k=3, **PIN)
+    s = r.summary()
+    assert s["method"] == "sti" and s["n"] == 16 and s["has_interactions"]
+    import json
+    json.dumps(s)  # summary must be JSON-able
+    assert r.mislabel_scores(y, 2).shape == (16,)
+    assert r.keep_order().shape == (16,)
+    # value-only results fall back for mislabel, raise for interactions
+    rv = get_method("loo")(x, y, xt, yt, k=3)
+    assert rv.mislabel_scores(y, 2).shape == (16,)
+    with pytest.raises(ValueError, match="no interaction matrix"):
+        rv.interaction_matrix()
+
+
+# ------------------------------------------------------------------- session
+def test_session_streaming_matches_one_shot():
+    """Incremental update()/finalize() == one-shot fused pipeline, including
+    ragged batch boundaries that do not align with test_batch."""
+    rng = np.random.default_rng(7)
+    x, y, xt, yt = _rand_problem(rng, 48, 37, dim=4, classes=3)
+    one = fused_sti_knn_interactions(x, y, xt, yt, 5, test_batch=16, **PIN)
+    sess = ValuationSession(x, y, k=5, test_batch=16, **PIN)
+    for lo, hi in ((0, 5), (5, 21), (21, 22), (22, 37)):
+        sess.update(xt[lo:hi], yt[lo:hi])
+    assert sess.t_seen == 37
+    res = sess.finalize()
+    assert res.meta["engine"] == "session" and res.meta["t"] == 37
+    np.testing.assert_allclose(
+        np.asarray(res.phi), np.asarray(one), atol=1e-5
+    )
+    # finalize is a snapshot: more updates keep refining
+    sess.update(xt[:3], yt[:3])
+    assert sess.t_seen == 40
+    assert res.meta["t"] == 37  # earlier artifact unchanged
+
+
+def test_session_single_point_and_validation():
+    rng = np.random.default_rng(8)
+    x, y, xt, yt = _rand_problem(rng, 12, 3)
+    sess = ValuationSession(x, y, k=3, **PIN)
+    with pytest.raises(ValueError, match="update"):
+        sess.finalize()
+    sess.update(xt[0], yt[0])  # 1-D single test point is accepted
+    assert sess.t_seen == 1
+    with pytest.raises(ValueError, match="unknown mode"):
+        ValuationSession(x, y, mode="loo")
+
+
+def test_session_checkpoint_restore(tmp_path):
+    rng = np.random.default_rng(9)
+    x, y, xt, yt = _rand_problem(rng, 24, 20)
+    full = ValuationSession(x, y, k=5, test_batch=8, **PIN)
+    full.update(xt, yt)
+    want = full.finalize()
+
+    first = ValuationSession(x, y, k=5, test_batch=8, **PIN)
+    first.update(xt[:11], yt[:11])
+    ckpt = first.checkpoint(tmp_path / "sess")
+    resumed = ValuationSession.restore(ckpt, x, y, **PIN)
+    assert resumed.t_seen == 11
+    resumed.update(xt[11:], yt[11:])
+    np.testing.assert_allclose(
+        np.asarray(resumed.finalize().phi), np.asarray(want.phi), atol=1e-5
+    )
+
+
+# -------------------------------------------------------------------- wknn
+@pytest.mark.parametrize("n,t,k", [(8, 3, 2), (9, 2, 3), (7, 4, 5)])
+@pytest.mark.parametrize("weights", ["rbf", "inverse", "uniform"])
+def test_wknn_matches_bruteforce(n, t, k, weights):
+    rng = np.random.default_rng(n * 31 + t * 7 + k)
+    x, y, xt, yt = _rand_problem(rng, n, t, dim=2)
+    want = brute_force_wknn_shapley(
+        np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), k,
+        weights=weights)
+    got = np.asarray(wknn_shapley_values(x, y, xt, yt, k, weights=weights))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_wknn_uniform_equals_unweighted():
+    rng = np.random.default_rng(10)
+    x, y, xt, yt = _rand_problem(rng, 30, 10)
+    w = wknn_shapley_values(x, y, xt, yt, 5, weights="uniform")
+    s = knn_shapley_values(x, y, xt, yt, 5)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(s), atol=1e-6)
+
+
+def test_wknn_streaming_invariant():
+    """Batch-invariant weights: result independent of test_batch."""
+    rng = np.random.default_rng(11)
+    x, y, xt, yt = _rand_problem(rng, 20, 13)
+    a = wknn_shapley_values(x, y, xt, yt, 3, test_batch=13)
+    b = wknn_shapley_values(x, y, xt, yt, 3, test_batch=4)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# -------------------------------------------------------- DataValuator shim
+def test_datavaluator_backcompat_surface():
+    rng = np.random.default_rng(12)
+    x, y, xt, yt = _rand_problem(rng, 16, 6)
+    dv = DataValuator(k=3, fill="chunked")
+    phi = dv.interaction_matrix(x, y, xt, yt)
+    assert phi.shape == (16, 16)
+    assert dv.shapley_values(x, y, xt, yt).shape == (16,)
+    assert dv.loo(x, y, xt, yt).shape == (16,)
+    r = dv.run(x, y, xt, yt, method="wknn")
+    assert r.method == "wknn"
+    sess = dv.session(x, y, distance="xla")
+    sess.update(xt, yt)
+    np.testing.assert_allclose(
+        np.asarray(sess.finalize().phi), np.asarray(phi), atol=1e-5
+    )
+
+
+def test_datavaluator_validates_eagerly():
+    with pytest.raises(ValueError, match="registered"):
+        DataValuator(mode="definitely-not-a-mode")
+    with pytest.raises(ValueError, match="engine"):
+        DataValuator(engine="definitely-not-an-engine")
+    with pytest.raises(ValueError, match="k must be"):
+        DataValuator(k=0)
+
+
+def test_embed_fn_applied_in_run_and_session():
+    rng = np.random.default_rng(13)
+    x, y, xt, yt = _rand_problem(rng, 16, 6)
+    shift = lambda a: a + 1.0  # distance-preserving: same result
+    dv = DataValuator(k=3, embed_fn=shift, fill="chunked")
+    base = DataValuator(k=3, fill="chunked")
+    np.testing.assert_allclose(
+        np.asarray(dv.interaction_matrix(x, y, xt, yt)),
+        np.asarray(base.interaction_matrix(x, y, xt, yt)),
+        atol=1e-6,
+    )
