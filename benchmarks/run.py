@@ -207,7 +207,120 @@ def bench_kernels():
          _time(sti_fill_pallas, g, ranks, interpret=True, reps=1),
          "interpret-mode (correctness only; perf target is TPU)"),
     ]
+    rows += bench_diag_hoist()
     return rows
+
+
+def bench_diag_hoist():
+    """Satellite micro-bench: the fused step's diagonal term now reuses the
+    fill stage's u (gathered back to train coordinates) instead of
+    re-broadcasting the (tb, n) label comparison. Times one full fused-style
+    step body with each diag formulation and reports the delta."""
+    from repro.core.sti_knn import (
+        pairwise_sq_dists, ranks_from_order, superdiagonal_g, _fill_chunked)
+
+    t, n, d, k = 64, 1024, 16, 5
+    x, y, xt, yt = _problem(n, t, d)
+    mask = jnp.ones((t,), jnp.float32)
+
+    def step_body(diag_fn):
+        def step(xb, yb, mask):
+            d2 = pairwise_sq_dists(xb, x)
+            order = jnp.argsort(d2, axis=-1, stable=True)
+            ranks = ranks_from_order(order)
+            u = (y[order] == yb[:, None]).astype(jnp.float32) * (
+                mask / k)[:, None]
+            g = superdiagonal_g(u, k)
+            return _fill_chunked(g, ranks), diag_fn(u, ranks, yb, mask)
+        return jax.jit(step)
+
+    def diag_legacy(u, ranks, yb, mask):   # re-broadcasts the label match
+        return jnp.sum(
+            (y[None, :] == yb[:, None]).astype(jnp.float32)
+            * (mask / k)[:, None], axis=0)
+
+    def diag_hoisted(u, ranks, yb, mask):  # rides on the fill stage's u
+        return jnp.sum(jnp.take_along_axis(u, ranks, axis=-1), axis=0)
+
+    us_legacy = _time(step_body(diag_legacy), xt, yt, mask)
+    us_hoisted = _time(step_body(diag_hoisted), xt, yt, mask)
+    return [
+        ("fused_step_diag_legacy_t64_n1024", us_legacy,
+         "diag=fresh_label_broadcast"),
+        ("fused_step_diag_hoisted_t64_n1024", us_hoisted,
+         f"diag=fill_stage_u;step_delta={us_legacy - us_hoisted:+.0f}us"),
+    ]
+
+
+# ------------------------------------------------------------ sharded:
+# the multi-device fused pipeline, measured under forced host devices so the
+# scaling rows exist on CPU-only hosts too (genuine speedups need real
+# accelerators; what CPU rows track is overhead + the n^2/D memory split).
+def bench_sharded():
+    import os
+    import subprocess
+    import sys
+    from pathlib import Path
+
+    n, t, k, tb, devices = 512, 64, 5, 32, 8
+    code = f"""
+import time
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.kernels.sti_pipeline import (
+    fused_sti_knn_interactions, sharded_sti_knn_interactions)
+
+rng = np.random.default_rng(0)
+n, t, k, tb = {n}, {t}, {k}, {tb}
+x = jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32))
+y = jnp.asarray(rng.integers(0, 2, n).astype(np.int32))
+xt = jnp.asarray(rng.normal(size=(t, 16)).astype(np.float32))
+yt = jnp.asarray(rng.integers(0, 2, t).astype(np.int32))
+
+def timeit(fn):
+    jax.block_until_ready(fn())  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / 3 * 1e6
+
+us_fused = timeit(lambda: fused_sti_knn_interactions(
+    x, y, xt, yt, k, test_batch=tb, fill="chunked",
+    fill_params={{"chunk": 1}}, distance="xla"))
+us_shard = timeit(lambda: sharded_sti_knn_interactions(
+    x, y, xt, yt, k, test_batch=tb, fill="chunked",
+    fill_params={{"chunk": 1}}, distance="xla"))
+err = float(jnp.max(jnp.abs(
+    fused_sti_knn_interactions(x, y, xt, yt, k, test_batch=tb)
+    - sharded_sti_knn_interactions(x, y, xt, yt, k, test_batch=tb))))
+print(f"ROW,{{jax.device_count()}},{{us_fused:.1f}},{{us_shard:.1f}},{{err:.2e}}")
+"""
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"),
+    )
+    p = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=900)
+    if p.returncode != 0:
+        return [("sharded_subprocess_failed", 0.0,
+                 (p.stderr.strip().splitlines() or [""])[-1][:120],
+                 {"method": "sti", "engine": "sharded"})]
+    dev, us_fused, us_shard, err = [
+        ln for ln in p.stdout.splitlines() if ln.startswith("ROW,")
+    ][0].split(",")[1:]
+    dev = int(dev)
+    per_dev_mb = n * n * 4 / dev / 2**20
+    return [
+        (f"sti_fused_1dev_n{n}_t{t}", float(us_fused),
+         f"acc_mem={n*n*4/2**20:.1f}MiB",
+         {"method": "sti", "engine": "fused"}),
+        (f"sti_sharded_{dev}dev_n{n}_t{t}", float(us_shard),
+         f"acc_mem_per_dev={per_dev_mb:.2f}MiB;max_err_vs_fused={err};"
+         f"forced_host_devices={dev}",
+         {"method": "sti", "engine": "sharded"}),
+    ]
 
 
 BENCHES = {
@@ -218,6 +331,7 @@ BENCHES = {
     "mislabel": bench_mislabel_detection,
     "structure": bench_interaction_structure,
     "kernels": bench_kernels,
+    "sharded": bench_sharded,
 }
 
 
@@ -246,6 +360,7 @@ def main() -> None:
         "mislabel": {"method": "sti", "engine": "scan"},
         "structure": {"method": "sti", "engine": "scan"},
         "kernels": {"method": "sti", "engine": "kernel"},
+        "sharded": {"method": "sti", "engine": "sharded"},
     }
     for nm in names:
         for row in BENCHES[nm]():
@@ -256,18 +371,35 @@ def main() -> None:
             all_rows.append(
                 {"bench": nm, "name": row[0],
                  "us_per_call": round(float(row[1]), 1), "derived": row[2],
-                 "method": prov.get("method"), "engine": prov.get("engine")})
+                 "method": prov.get("method"), "engine": prov.get("engine"),
+                 # rows carry their own backend: merge-on-write mixes runs
+                 # from different hosts, so file-level fields are not enough
+                 "backend": jax.default_backend()})
     if args.json:
+        # merge-on-write: a partial run (--only sharded) APPENDS its rows to
+        # the existing report (matching (bench, name) rows are replaced), so
+        # per-engine trajectories accumulate instead of clobbering the file
+        old_rows = []
+        try:
+            with open(args.json_path) as f:
+                old_rows = json.load(f).get("rows", [])
+        except (OSError, ValueError):
+            pass
+        # a re-run bench replaces ALL of its old rows (not just matching
+        # names): stale rows -- a recorded subprocess failure, rows whose
+        # parameterized names no longer appear -- must not outlive a rerun
+        rows = [r for r in old_rows if r.get("bench") not in names] + all_rows
         payload = {
             "backend": jax.default_backend(),
             "jax": jax.__version__,
             "platform": platform.platform(),
-            "benches": names,
-            "rows": all_rows,
+            "benches": sorted({r["bench"] for r in rows}),
+            "rows": rows,
         }
         with open(args.json_path, "w") as f:
             json.dump(payload, f, indent=1)
-        print(f"# wrote {args.json_path} ({len(all_rows)} rows)")
+        print(f"# wrote {args.json_path} "
+              f"({len(all_rows)} new rows, {len(rows)} total)")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ from repro.core import (
     analysis,
     ValuationResult,
     ValuationMethod,
+    ShardedValuationSession,
     ValuationSession,
     register_method,
     get_method,
@@ -40,6 +41,7 @@ __all__ = [
     "ValuationResult",
     "ValuationMethod",
     "ValuationSession",
+    "ShardedValuationSession",
     "register_method",
     "get_method",
     "list_methods",

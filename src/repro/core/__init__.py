@@ -19,7 +19,7 @@ from repro.core.methods import (
     get_method,
     list_methods,
 )
-from repro.core.session import ValuationSession
+from repro.core.session import ShardedValuationSession, ValuationSession
 
 __all__ = [
     "sti_knn_interactions",
@@ -40,4 +40,5 @@ __all__ = [
     "get_method",
     "list_methods",
     "ValuationSession",
+    "ShardedValuationSession",
 ]

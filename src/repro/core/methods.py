@@ -18,11 +18,13 @@ methods (all return `ValuationResult`):
   "wknn"         weighted soft-label KNN-Shapley (arXiv 2401.11103 family)
   "loo"          leave-one-out values
 
-Interaction methods accept `engine=` ("fused" | "scan" | "distributed"):
-fused streams donated-accumulator steps through the distance->rank->g->fill
-pipeline, scan is the single-jit lax.scan path, distributed runs the
-shard_map production cell over a device mesh (routed through repro.compat so
-it works on jax 0.4.x too).
+Interaction methods accept `engine=` ("fused" | "scan" | "distributed" |
+"sharded"): fused streams donated-accumulator steps through the
+distance->rank->g->fill pipeline, scan is the single-jit lax.scan path,
+distributed runs the shard_map production cell over a device mesh (routed
+through repro.compat so it works on jax 0.4.x too), and sharded is the
+multi-device fused pipeline (test stream + accumulator row blocks sharded
+over a 1-D mesh, n^2/D accumulator memory per device; DESIGN.md Sec. 10).
 """
 
 from __future__ import annotations
@@ -44,7 +46,7 @@ __all__ = [
     "INTERACTION_ENGINES",
 ]
 
-INTERACTION_ENGINES = ("fused", "scan", "distributed")
+INTERACTION_ENGINES = ("fused", "scan", "distributed", "sharded")
 
 
 @runtime_checkable
@@ -108,7 +110,7 @@ class _InteractionMethod:
 
     accepted_options = frozenset({
         "engine", "test_batch", "fill", "fill_params", "distance",
-        "distance_params", "autotune", "mesh",
+        "distance_params", "autotune", "mesh", "shards",
     })
 
     def __init__(self, name: str, mode: str):
@@ -120,10 +122,18 @@ class _InteractionMethod:
                  fill: str = "auto", fill_params: Optional[dict] = None,
                  distance: str = "auto",
                  distance_params: Optional[dict] = None,
-                 autotune: bool = False, mesh=None) -> ValuationResult:
+                 autotune: bool = False, mesh=None,
+                 shards: Optional[int] = None) -> ValuationResult:
         if engine not in INTERACTION_ENGINES:
             raise ValueError(
                 f"unknown engine {engine!r}; choose from {INTERACTION_ENGINES}"
+            )
+        if shards is not None and engine != "sharded":
+            # silently running single-device would defeat the n^2/D memory
+            # split the caller asked for
+            raise ValueError(
+                f"shards= is only meaningful with engine='sharded' "
+                f"(got engine={engine!r})"
             )
         meta = _base_meta(x_train, x_test, k)
         meta.update(method=self.name, mode=self.mode, engine=engine)
@@ -148,6 +158,17 @@ class _InteractionMethod:
                 distance=distance, distance_params=distance_params,
             )
             meta.update(test_batch=test_batch, **resolved)
+        elif engine == "sharded":
+            from repro.kernels.sti_pipeline import sharded_sti_knn_interactions
+
+            phi, resolved = sharded_sti_knn_interactions(
+                x_train, y_train, x_test, y_test, k, mode=self.mode,
+                test_batch=test_batch, shards=shards, mesh=mesh, fill=fill,
+                fill_params=fill_params, distance=distance,
+                distance_params=distance_params, autotune=autotune,
+                return_info=True,
+            )
+            meta.update(resolved)
         elif engine == "scan":
             from repro.core.sti_knn import resolve_fill, sti_knn_interactions
 

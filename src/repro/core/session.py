@@ -1,21 +1,33 @@
 """`ValuationSession`: constant-memory streaming valuation over unbounded t.
 
 The fused pipeline's donated-accumulator step makes the STI-KNN computation
-a pure fold over test batches: (acc, diag) <- step(acc, diag, xb, yb, ...).
-A session owns that fold so test points can arrive incrementally (online
-valuation, a test set that does not fit in memory, or a service endpoint):
+a pure fold over test batches: (acc, diag) <- step(acc, diag, xb, yb, mask,
+...). A session owns that fold so test points can arrive incrementally
+(online valuation, a test set that does not fit in memory, or a service
+endpoint):
 
     sess = ValuationSession(x_train, y_train, k=5)
     for xb, yb in test_stream:
         sess.update(xb, yb)
     result = sess.finalize()          # ValuationResult, phi averaged over t
 
-Peak device memory is O(n^2 + test_batch * n) regardless of how many
+Every batch is padded to the compiled `test_batch` shape with a validity
+mask (`pad_test_batch`), so ONE executable serves full and ragged batches
+alike. Peak device memory is O(n^2 + test_batch * n) regardless of how many
 updates arrive. `finalize()` is a snapshot -- the session keeps accepting
 updates afterwards. `checkpoint()` / `ValuationSession.restore()` persist
 the partial sums (npz) so a long-running valuation survives preemption:
 the accumulators are plain sums, so a restored session continues exactly
 where the saved one stopped.
+
+`ShardedValuationSession` is the multi-device form (DESIGN.md Sec. 10): the
+test stream is row-sharded over a 1-D device mesh and the (n, n) accumulator
+is sharded by ROW BLOCKS -- each device holds an (n/D, n) partial, peak
+accumulator memory n^2/D per device -- with the row blocks all-gathered only
+at `finalize()`. Checkpoints are written as the dense host arrays, so a
+stream checkpointed under D devices restores under any device count
+(including 1: the session silently falls back to the single-device fused
+step when only one shard is usable).
 """
 
 from __future__ import annotations
@@ -30,13 +42,15 @@ import jax.numpy as jnp
 
 from repro.core.results import ValuationResult
 
-__all__ = ["ValuationSession"]
+__all__ = ["ValuationSession", "ShardedValuationSession"]
 
 _MODES = ("sti", "sii")
 
 
 class ValuationSession:
     """Streaming STI/SII valuation against a fixed training set."""
+
+    _ENGINE = "session"
 
     def __init__(self, x_train, y_train, *, k: int = 5, mode: str = "sti",
                  test_batch: int = 256, fill: str = "auto",
@@ -53,21 +67,24 @@ class ValuationSession:
         self.y_train = jnp.asarray(y_train)
         if self.x_train.ndim != 2:
             raise ValueError("train features must be (num_points, dim)")
-        n, d = self.x_train.shape
         self.k = int(k)
         self.mode = mode
         self.test_batch = max(1, int(test_batch))
+        self._t = 0
+        # hook: subclasses build their own step/accumulators (sharded)
+        self._build(fill, fill_params, distance, distance_params, autotune)
 
+    def _build(self, fill, fill_params, distance, distance_params, autotune):
         from repro.kernels.sti_pipeline import prepare_fused_step
 
+        n, d = self.x_train.shape
         self._step, self._resolved = prepare_fused_step(
-            n, d, k, mode=mode, test_batch=self.test_batch, fill=fill,
-            fill_params=fill_params, distance=distance,
+            n, d, self.k, mode=self.mode, test_batch=self.test_batch,
+            fill=fill, fill_params=fill_params, distance=distance,
             distance_params=distance_params, autotune=autotune,
         )
         self._acc = jnp.zeros((n, n), jnp.float32)
         self._diag = jnp.zeros((n,), jnp.float32)
-        self._t = 0
 
     # -------------------------------------------------------------- updates
     @property
@@ -78,10 +95,14 @@ class ValuationSession:
     def update(self, x_test_batch, y_test_batch) -> "ValuationSession":
         """Fold one batch of test points into the accumulators.
 
-        Batches of any size: full `test_batch` slices run through the cached
-        donated step; a trailing partial slice runs a shape-specialized
-        instance of the same program. Returns self (chainable).
+        Batches of any size: the batch is consumed in `test_batch` slices,
+        each padded to the compiled shape with a zero validity mask, so the
+        ONE cached executable serves every slice (a stream of tiny updates
+        pays the full test_batch step cost per update -- size `test_batch`
+        to the arrival granularity). Returns self (chainable).
         """
+        from repro.kernels.sti_pipeline import pad_test_batch
+
         xb = jnp.asarray(self._embed(jnp.asarray(x_test_batch)))
         yb = jnp.asarray(y_test_batch)
         if xb.ndim == 1:  # a single test point
@@ -95,25 +116,35 @@ class ValuationSession:
         b = xb.shape[0]
         for start in range(0, b, self.test_batch):
             sl = slice(start, min(start + self.test_batch, b))
+            xs, ys, mask = pad_test_batch(xb[sl], yb[sl], self.test_batch)
             self._acc, self._diag = self._step(
-                self._acc, self._diag, xb[sl], yb[sl],
+                self._acc, self._diag, *self._place_batch(xs, ys, mask),
                 self.x_train, self.y_train,
             )
         self._t += b
         return self
 
+    def _place_batch(self, xs, ys, mask):
+        """Hook: device placement of one padded batch (sharded override)."""
+        return xs, ys, mask
+
     # ------------------------------------------------------------- results
+    def _gathered_state(self):
+        """Hook: (acc, diag) as whole arrays (sharded sessions all-gather)."""
+        return self._acc, self._diag
+
     def finalize(self) -> ValuationResult:
         """Snapshot the running mean as a `ValuationResult` (the session
         remains live; later updates refine the next finalize)."""
         if self._t == 0:
             raise ValueError("no test points seen: call update() first")
-        phi = self._acc / self._t
-        phi = jnp.fill_diagonal(phi, self._diag / self._t, inplace=False)
+        acc, diag = self._gathered_state()
+        phi = acc / self._t
+        phi = jnp.fill_diagonal(phi, diag / self._t, inplace=False)
         meta = {
             "method": self.mode,
             "mode": self.mode,
-            "engine": "session",
+            "engine": self._ENGINE,
             "k": self.k,
             "n": int(self.x_train.shape[0]),
             "t": self._t,
@@ -125,8 +156,16 @@ class ValuationSession:
         return ValuationResult(method=self.mode, phi=phi, meta=meta)
 
     # --------------------------------------------------------- persistence
+    def _extra_config(self) -> dict:
+        """Hook: subclass additions to the checkpoint config blob."""
+        return {}
+
     def checkpoint(self, path) -> Path:
-        """Persist the partial sums + config to `<path>.npz`."""
+        """Persist the partial sums + config to `<path>.npz`.
+
+        State is saved as dense host arrays (sharded sessions gather their
+        row blocks first), so a checkpoint restores under any device count.
+        """
         base = Path(path)
         if base.suffix == ".npz":
             base = base.with_suffix("")
@@ -134,15 +173,22 @@ class ValuationSession:
         cfg = {
             "k": self.k, "mode": self.mode, "test_batch": self.test_batch,
             "t": self._t, "resolved": self._resolved,
+            **self._extra_config(),
         }
+        acc, diag = self._gathered_state()
         out = base.with_suffix(".npz")
         np.savez_compressed(
             out,
-            acc=np.asarray(self._acc),
-            diag=np.asarray(self._diag),
+            acc=np.asarray(acc),
+            diag=np.asarray(diag),
             config=np.asarray(json.dumps(cfg)),
         )
         return out
+
+    @classmethod
+    def _restore_opts(cls, cfg: dict) -> dict:
+        """Hook: constructor kwargs a subclass recovers from the config."""
+        return {}
 
     @classmethod
     def restore(cls, path, x_train, y_train, *,
@@ -159,10 +205,18 @@ class ValuationSession:
             cfg = json.loads(str(z["config"]))
         # default to the checkpoint's RESOLVED fill/distance so the restored
         # session runs the same (possibly autotuned) implementations; the
-        # caller may override, e.g. when restoring on a different backend
+        # caller may override, e.g. when restoring on a different backend.
+        # (The sharded engine reports its rectangular block fill under a
+        # descriptive non-registry name -- leave those to re-resolve.)
+        from repro.core.sti_knn import _FILL_FNS
+
         for opt in ("fill", "distance"):
-            if opt in cfg.get("resolved", {}):
-                session_opts.setdefault(opt, cfg["resolved"][opt])
+            value = cfg.get("resolved", {}).get(opt)
+            if value is None or (opt == "fill" and value not in _FILL_FNS):
+                continue
+            session_opts.setdefault(opt, value)
+        for opt, value in cls._restore_opts(cfg).items():
+            session_opts.setdefault(opt, value)
         sess = cls(
             x_train, y_train, k=cfg["k"], mode=cfg["mode"],
             test_batch=cfg["test_batch"], embed_fn=embed_fn, **session_opts,
@@ -172,7 +226,119 @@ class ValuationSession:
                 f"checkpoint is for n={acc.shape[0]} train points, "
                 f"got n={sess.x_train.shape[0]}"
             )
-        sess._acc = jnp.asarray(acc)
-        sess._diag = jnp.asarray(diag)
+        sess._place_state(acc, diag)
         sess._t = int(cfg["t"])
         return sess
+
+    def _place_state(self, acc, diag) -> None:
+        """Hook: install restored accumulators (sharded sessions re-place
+        them with their row-block shardings)."""
+        self._acc = jnp.asarray(acc)
+        self._diag = jnp.asarray(diag)
+
+
+class ShardedValuationSession(ValuationSession):
+    """Multi-device streaming valuation: test stream row-sharded over a 1-D
+    mesh, (n, n) accumulator sharded by row blocks ((n/D, n) per device),
+    all-gather of the completed rows only at finalize/checkpoint.
+
+    `shards=None` uses every local device (clamped to a divisor of n via
+    `repro.distributed.sharding.shard_count`); `shards=1` -- or a single-
+    device host -- falls back to the plain fused step, so the same code path
+    runs everywhere. `test_batch` is rounded UP to a multiple of the shard
+    count (the validity mask absorbs ragged input).
+    """
+
+    _ENGINE = "sharded"
+
+    def __init__(self, x_train, y_train, *, shards: Optional[int] = None,
+                 mesh=None, **opts):
+        self._requested_shards = shards
+        self._requested_mesh = mesh
+        self.mesh = None
+        self.shards = 1
+        super().__init__(x_train, y_train, **opts)
+
+    def _build(self, fill, fill_params, distance, distance_params, autotune):
+        from repro.distributed.sharding import shard_count
+
+        n = int(self.x_train.shape[0])
+        if self._requested_mesh is not None:
+            m = self._requested_mesh
+            self.shards = int(m.shape[m.axis_names[0]])
+        else:
+            self.shards = shard_count(n, self._requested_shards)
+        if self.shards <= 1:
+            # single-host fallback: the fused step IS the 1-shard layout
+            super()._build(fill, fill_params, distance, distance_params,
+                           autotune)
+            self._resolved = dict(self._resolved, shards=1)
+            return
+        from repro.kernels.sti_pipeline import prepare_sharded_step
+
+        d = int(self.x_train.shape[1])
+        self._step, self._resolved, self.mesh = prepare_sharded_step(
+            n, d, self.k, mesh=self._requested_mesh, shards=self.shards,
+            mode=self.mode, test_batch=self.test_batch, fill=fill,
+            fill_params=fill_params, distance=distance,
+            distance_params=distance_params, autotune=autotune,
+        )
+        self.test_batch = int(self._resolved["test_batch"])
+        self._place_state(
+            np.zeros((n, n), np.float32), np.zeros((n,), np.float32)
+        )
+        from repro.distributed.sharding import replicated_sharding
+
+        rep = replicated_sharding(self.mesh)
+        self.x_train = jax.device_put(self.x_train, rep)
+        self.y_train = jax.device_put(self.y_train, rep)
+
+    def _place_batch(self, xs, ys, mask):
+        if self.mesh is None:
+            return xs, ys, mask
+        from repro.distributed.sharding import (
+            row_vector_sharding,
+            stream_sharding,
+        )
+
+        axis = self.mesh.axis_names[0]
+        vec = row_vector_sharding(self.mesh, axis=axis)
+        return (
+            jax.device_put(xs, stream_sharding(self.mesh, axis=axis)),
+            jax.device_put(ys, vec),
+            jax.device_put(mask, vec),
+        )
+
+    def _place_state(self, acc, diag) -> None:
+        if self.mesh is None:
+            super()._place_state(acc, diag)
+            return
+        from repro.distributed.sharding import (
+            row_block_sharding,
+            row_vector_sharding,
+        )
+
+        axis = self.mesh.axis_names[0]
+        self._acc = jax.device_put(
+            jnp.asarray(acc), row_block_sharding(self.mesh, axis=axis)
+        )
+        self._diag = jax.device_put(
+            jnp.asarray(diag), row_vector_sharding(self.mesh, axis=axis)
+        )
+
+    def _gathered_state(self):
+        if self.mesh is None:
+            return self._acc, self._diag
+        from repro.distributed.sharding import replicated_sharding
+
+        rep = replicated_sharding(self.mesh)
+        return jax.device_put(self._acc, rep), jax.device_put(self._diag, rep)
+
+    def _extra_config(self) -> dict:
+        return {"shards": self.shards}
+
+    @classmethod
+    def _restore_opts(cls, cfg: dict) -> dict:
+        # request the checkpoint's shard count; shard_count() re-clamps it
+        # to whatever THIS host can satisfy (possibly 1 -> fused fallback)
+        return {"shards": cfg["shards"]} if "shards" in cfg else {}

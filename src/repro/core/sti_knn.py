@@ -38,6 +38,8 @@ __all__ = [
     "sti_knn_interactions",
     "sti_knn_matrix_one_test",
     "register_fill_fn",
+    "register_acc_fill_fn",
+    "accumulate_fill",
     "resolve_fill",
     "InteractionMode",
 ]
@@ -150,12 +152,14 @@ def _fill_xla(g: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(jax.vmap(one)(g, ranks), axis=0)
 
 
-def _scan_fill(one_fn: Callable, g, ranks, chunk: int) -> jnp.ndarray:
+def _scan_fill(one_fn: Callable, g, ranks, chunk: int, acc0=None) -> jnp.ndarray:
     """Shared scaffolding for the streaming fills: pad the test dim to a
     multiple of `chunk` (padded rows have g == 0, so every value they
     contribute is exactly 0), then lax.scan `chunk` test points at a time
     into an (n, n) f32 accumulator. `one_fn(g_p, r_p) -> (n, n)` is the
-    per-test-point kernel."""
+    per-test-point kernel. `acc0` seeds the accumulator (the in-place
+    accumulate form: the scan carry IS the caller's accumulator, so no
+    second (n, n) temporary is materialized); None starts from zeros."""
     t, n = g.shape
     chunk = max(1, min(int(chunk), t))
     g = g.astype(jnp.float32)
@@ -170,10 +174,20 @@ def _scan_fill(one_fn: Callable, g, ranks, chunk: int) -> jnp.ndarray:
 
     acc, _ = jax.lax.scan(
         body,
-        jnp.zeros((n, n), jnp.float32),
+        jnp.zeros((n, n), jnp.float32) if acc0 is None else acc0,
         (g.reshape(-1, chunk, n), ranks.reshape(-1, chunk, n)),
     )
     return acc
+
+
+def _chunked_one(n: int) -> Callable:
+    idx = jnp.arange(n)
+
+    def one(g_p, r_p):
+        m_sorted = jnp.where(idx[None, :] >= idx[:, None], g_p[None, :], g_p[:, None])
+        return m_sorted[r_p][:, r_p]
+
+    return one
 
 
 def _fill_chunked(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.ndarray:
@@ -188,13 +202,21 @@ def _fill_chunked(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.
     "Fill variants" measures it 2-3x faster than `_fill_xla` on CPU at
     t=64, n=2048 on top of the memory win).
     """
-    idx = jnp.arange(g.shape[-1])
+    return _scan_fill(_chunked_one(g.shape[-1]), g, ranks, chunk)
+
+
+def _onehot_one(n: int) -> Callable:
+    thresh = jnp.arange(n)
 
     def one(g_p, r_p):
-        m_sorted = jnp.where(idx[None, :] >= idx[:, None], g_p[None, :], g_p[:, None])
-        return m_sorted[r_p][:, r_p]
+        dg = g_p - jnp.concatenate([g_p[1:], jnp.zeros((1,), g_p.dtype)])
+        c = (r_p[:, None] <= thresh[None, :]).astype(jnp.float32)
+        return jax.lax.dot_general(
+            c * dg[None, :], c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
 
-    return _scan_fill(one, g, ranks, chunk)
+    return one
 
 
 def _fill_onehot(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.ndarray:
@@ -208,17 +230,17 @@ def _fill_onehot(g: jnp.ndarray, ranks: jnp.ndarray, *, chunk: int = 1) -> jnp.n
     fills) but no gather unit pressure; wins only where matmul throughput
     dwarfs gather throughput (see EXPERIMENTS.md "Fill variants").
     """
-    thresh = jnp.arange(g.shape[-1])
+    return _scan_fill(_onehot_one(g.shape[-1]), g, ranks, chunk)
 
-    def one(g_p, r_p):
-        dg = g_p - jnp.concatenate([g_p[1:], jnp.zeros((1,), g_p.dtype)])
-        c = (r_p[:, None] <= thresh[None, :]).astype(jnp.float32)
-        return jax.lax.dot_general(
-            c * dg[None, :], c, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
 
-    return _scan_fill(one, g, ranks, chunk)
+def _acc_fill_chunked(acc, g, ranks, *, chunk: int = 1) -> jnp.ndarray:
+    """In-place form of the chunked fill: the scan carry is the caller's
+    accumulator, so no second (n, n) temporary exists."""
+    return _scan_fill(_chunked_one(g.shape[-1]), g, ranks, chunk, acc0=acc)
+
+
+def _acc_fill_onehot(acc, g, ranks, *, chunk: int = 1) -> jnp.ndarray:
+    return _scan_fill(_onehot_one(g.shape[-1]), g, ranks, chunk, acc0=acc)
 
 
 @functools.partial(
@@ -232,7 +254,6 @@ def _sti_knn_jit(
     n = x_train.shape[0]
     t = x_test.shape[0]
     acc_dtype = jnp.float32
-    fill = functools.partial(_FILL_FNS[fill_fn_name], **dict(fill_static))
 
     def body(carry, batch):
         acc, diag = carry
@@ -243,10 +264,11 @@ def _sti_knn_jit(
         match = (y_train[order] == yb[:, None]).astype(acc_dtype)
         u = match / k
         g = superdiagonal_g(u, k, mode=mode)
-        acc = acc + fill(g, ranks)
-        diag = diag + jnp.sum(
-            (y_train[None, :] == yb[:, None]).astype(acc_dtype) / k, axis=0
-        )
+        acc = accumulate_fill(acc, g, ranks, fill_fn_name, fill_static)
+        # diag term hoisted into the already-computed u: u in train
+        # coordinates is u[p, ranks[p, i]] = 1[y_train[i] == y_p]/k, so the
+        # (tb, n) label broadcast is not recomputed.
+        diag = diag + jnp.sum(jnp.take_along_axis(u, ranks, axis=-1), axis=0)
         return (acc, diag), None
 
     # Stream test points in batches of `test_batch` (constant memory in t).
@@ -276,6 +298,35 @@ _FILL_FNS: dict[str, Callable] = {
     "chunked": _fill_chunked,
     "onehot": _fill_onehot,
 }
+
+# Accumulate-fill registry: `fn(acc, g, ranks, **static) -> acc` computes
+# acc + fill(g, ranks) WITHOUT materializing the fill's (n, n) result as a
+# separate temporary (scan-carry seeding for the XLA fills; the Pallas
+# variant aliases the accumulator buffer via input_output_aliases). Entries
+# are keyed by the same names as _FILL_FNS; a missing entry falls back to
+# the additive form in `accumulate_fill`.
+_ACC_FILL_FNS: dict[str, Callable] = {
+    "chunked": _acc_fill_chunked,
+    "onehot": _acc_fill_onehot,
+}
+
+
+def register_acc_fill_fn(name: str, fn: Callable) -> None:
+    """Register the in-place accumulate form of fill `name`:
+    `fn(acc, g, ranks, **static_params) -> acc` must equal
+    `acc + _FILL_FNS[name](g, ranks, **static_params)`."""
+    _ACC_FILL_FNS[name] = fn
+
+
+def accumulate_fill(acc, g, ranks, fill: str, fill_static: tuple = ()):
+    """acc += fill(g, ranks), via the registered in-place accumulate form
+    when one exists (no second (n, n) temporary) and the additive fallback
+    otherwise. `fill_static` is the hashable params tuple `resolve_fill`
+    returns."""
+    fn = _ACC_FILL_FNS.get(fill)
+    if fn is not None:
+        return fn(acc, g, ranks, **dict(fill_static))
+    return acc + _FILL_FNS[fill](g, ranks, **dict(fill_static))
 
 
 def _accepted_params(fn: Callable, params: dict) -> dict:

@@ -51,7 +51,9 @@ class DataValuator:
     # fill="auto" consults the persistent block autotuner cache
     # (repro.kernels.autotune); engine="fused" streams donated-accumulator
     # steps through the fused distance->rank->g->fill pipeline, "scan" is the
-    # single-jit lax.scan path, "distributed" the shard_map production cell.
+    # single-jit lax.scan path, "distributed" the shard_map production cell,
+    # "sharded" the multi-device fused pipeline (row-sharded accumulators,
+    # n^2/D per device; session() then opens a ShardedValuationSession).
     fill: str = "auto"
     engine: str = "fused"
 
@@ -87,12 +89,22 @@ class DataValuator:
         )
 
     def session(self, x_train, y_train, **opts) -> ValuationSession:
-        """Open a streaming `ValuationSession` against this training set."""
+        """Open a streaming `ValuationSession` against this training set
+        (a `ShardedValuationSession` when this valuator's engine is
+        "sharded" -- pass `shards=` through opts to pin the device count)."""
         opts.setdefault("k", self.k)
         opts.setdefault("mode", self.mode)
         opts.setdefault("test_batch", self.test_batch)
         opts.setdefault("fill", self.fill)
         opts.setdefault("embed_fn", self.embed_fn)
+        if self.engine == "sharded":
+            from repro.core.session import ShardedValuationSession
+
+            return ShardedValuationSession(x_train, y_train, **opts)
+        if "shards" in opts:
+            raise ValueError(
+                "shards= requires DataValuator(engine='sharded')"
+            )
         return ValuationSession(x_train, y_train, **opts)
 
     def interaction_matrix(self, x_train, y_train, x_test, y_test,

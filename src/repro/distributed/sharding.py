@@ -6,11 +6,16 @@ Strategies:
   fsdp   : weight d_model dim additionally sharded over 'data' (ZeRO-3-ish;
            XLA inserts all-gathers at use). Default for >= ~4B params.
 Batch dims always shard over ('pod','data') where present.
+
+The valuation-mesh helpers at the bottom own the sharded STI engine's
+layout (DESIGN.md Sec. 10): a 1-D mesh over VALUATION_AXIS, the (n, n)
+accumulator row-sharded over it (each device holds an (n/D, n) row block),
+and the test stream row-sharded the same way.
 """
 
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import numpy as np
@@ -19,7 +24,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import DEFAULT_RULES, FSDP_RULES, ModelConfig
 
 __all__ = ["rules_for", "strategy_for", "batch_spec", "cache_pytree_spec",
-           "named", "tree_named", "data_axes"]
+           "named", "tree_named", "data_axes",
+           "VALUATION_AXIS", "shard_count", "valuation_mesh",
+           "row_block_sharding", "row_vector_sharding", "stream_sharding",
+           "replicated_sharding"]
 
 
 def data_axes(mesh: Mesh):
@@ -101,6 +109,62 @@ def cache_pytree_spec(cfg: ModelConfig, caches, shape_kind: str, mesh: Mesh,
         return P(None, bspec) if leaf.ndim == 2 else P()
 
     return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+# --------------------------------------------------- sharded STI valuation
+# One axis, row blocks: device d of D owns rows [d*n/D, (d+1)*n/D) of the
+# (n, n) interaction accumulator and every D-th slice of each test batch.
+VALUATION_AXIS = "shards"
+
+
+def shard_count(n: int, requested: Optional[int] = None) -> int:
+    """Usable shard count for an n-row accumulator: the largest divisor of n
+    that is <= min(requested, LOCAL device count), so the row blocks are
+    exact ((n/D, n) each, the acceptance shape) without padding n; for the
+    power-of-two n and device counts we target this is just min(...).
+
+    Local devices only: the session feeds host arrays with jax.device_put,
+    which cannot address another process's devices. Multi-host sharding
+    would need a process-spanning mesh plus per-host data feeding -- build
+    that mesh explicitly and pass it to prepare_sharded_step."""
+    d = jax.local_device_count() if requested is None else int(requested)
+    d = max(1, min(d, jax.local_device_count()))
+    n = int(n)
+    while d > 1 and n % d:
+        d -= 1
+    return d
+
+
+def valuation_mesh(num_shards: Optional[int] = None, *,
+                   axis: str = VALUATION_AXIS) -> Mesh:
+    """1-D mesh over the first `num_shards` LOCAL devices (default: all;
+    see shard_count for the single-host scope)."""
+    devs = jax.local_devices()
+    num = len(devs) if num_shards is None else int(num_shards)
+    if not 1 <= num <= len(devs):
+        raise ValueError(
+            f"num_shards={num} out of range for {len(devs)} local devices"
+        )
+    return Mesh(np.asarray(devs[:num]), (axis,))
+
+
+def row_block_sharding(mesh: Mesh, *, axis: str = VALUATION_AXIS) -> NamedSharding:
+    """(n, n) accumulator sharded by row blocks: (n/D, n) per device."""
+    return NamedSharding(mesh, P(axis, None))
+
+
+def row_vector_sharding(mesh: Mesh, *, axis: str = VALUATION_AXIS) -> NamedSharding:
+    """(n,) diagonal sharded the same way as the accumulator rows."""
+    return NamedSharding(mesh, P(axis))
+
+
+def stream_sharding(mesh: Mesh, *, axis: str = VALUATION_AXIS) -> NamedSharding:
+    """(tb, d) test batch row-sharded: each device consumes tb/D points."""
+    return NamedSharding(mesh, P(axis, None))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
 
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:

@@ -1,16 +1,24 @@
 from repro.kernels import autotune, ops, ref
-from repro.kernels.sti_fill import sti_fill_pallas
+from repro.kernels.sti_fill import sti_fill_acc_pallas, sti_fill_pallas
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.sti_pipeline import fused_sti_knn_interactions, make_fused_step
+from repro.kernels.sti_pipeline import (
+    fused_sti_knn_interactions,
+    make_fused_step,
+    make_sharded_step,
+    sharded_sti_knn_interactions,
+)
 
 __all__ = [
     "autotune",
     "ops",
     "ref",
     "sti_fill_pallas",
+    "sti_fill_acc_pallas",
     "distance_pallas",
     "flash_attention_pallas",
     "fused_sti_knn_interactions",
     "make_fused_step",
+    "make_sharded_step",
+    "sharded_sti_knn_interactions",
 ]

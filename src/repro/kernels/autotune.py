@@ -3,9 +3,11 @@
 Times candidate configurations of the fill registry (chunk sizes, Pallas
 block shapes) and of the tiled distance kernel on synthetic data shaped like
 the caller's problem, then caches the winner in a JSON file keyed by
-(kind, backend, n-bucket, t-bucket). `sti_knn_interactions(..., fill="auto")`,
-the fused pipeline, and `DataValuator` consult the cache on every call; a
-miss falls back to a backend heuristic unless the caller opts into tuning
+(kind, backend, device-count, n-bucket, t-bucket) -- device count is part of
+the key so the sharded engine's per-device slice shapes tune independently
+of single-device runs. `sti_knn_interactions(..., fill="auto")`, the fused
+pipeline, and `DataValuator` consult the cache on every call; a miss falls
+back to a backend heuristic unless the caller opts into tuning
 (`autotune=True`), so the first tuned run pays the measurement cost once and
 every later process reuses it.
 
@@ -111,8 +113,14 @@ def _bucket(x: int) -> int:
     return 1 << max(0, int(np.ceil(np.log2(max(1, x)))))
 
 
-def _key(kind: str, backend: str, n: int, t: int) -> str:
-    return f"{kind}:{backend}:n{_bucket(n)}:t{_bucket(t)}"
+def _key(kind: str, backend: str, n: int, t: int,
+         devices: Optional[int] = None) -> str:
+    """Cache key. Entries are keyed by the visible DEVICE COUNT as well as
+    backend and bucketed sizes: the sharded engine executes its stages on
+    (t/D, n) and (n/D, n) slices, so a winner tuned single-device must not
+    leak into multi-device runs (and vice versa)."""
+    d = jax.device_count() if devices is None else int(devices)
+    return f"{kind}:{backend}:dev{d}:n{_bucket(n)}:t{_bucket(t)}"
 
 
 def _time_call(fn, *args, reps: int = 2) -> float:

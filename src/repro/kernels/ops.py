@@ -13,10 +13,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.sti_fill import sti_fill_pallas
+from repro.kernels.sti_fill import sti_fill_acc_pallas, sti_fill_pallas
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.core.sti_knn import register_fill_fn
+from repro.core.sti_knn import register_acc_fill_fn, register_fill_fn
 
 __all__ = [
     "sti_fill",
@@ -73,5 +73,23 @@ def _pallas_fill_interpret(
     )
 
 
+def _pallas_acc_fill(
+    acc, g, ranks, *, block_n: int = 256, block_t: int | None = None
+):
+    return sti_fill_acc_pallas(acc, g, ranks, block_n=block_n, block_t=block_t)
+
+
+def _pallas_acc_fill_interpret(
+    acc, g, ranks, *, block_n: int = 256, block_t: int | None = None
+):
+    return sti_fill_acc_pallas(
+        acc, g, ranks, block_n=block_n, block_t=block_t, interpret=True
+    )
+
+
 register_fill_fn("pallas", _pallas_fill)
 register_fill_fn("pallas_interpret", _pallas_fill_interpret)
+# in-place accumulate twins: the fused/sharded steps fold the fill straight
+# into the donated accumulator (no `acc + fill(...)` temporary)
+register_acc_fill_fn("pallas", _pallas_acc_fill)
+register_acc_fill_fn("pallas_interpret", _pallas_acc_fill_interpret)

@@ -31,7 +31,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sti_fill_pallas"]
+__all__ = ["sti_fill_pallas", "sti_fill_acc_pallas"]
+
+
+def _tile_sum(ra, rb, g):
+    """sum_p g[p, max(ra[p], rb[p])] over the tile's test block: the shared
+    inner loop of the zero-init and accumulate kernels."""
+    tb = ra.shape[0]
+
+    def body(p, acc):
+        m = jnp.maximum(ra[p][:, None], rb[p][None, :])  # (NB, NB)
+        return acc + jnp.take(g[p], m, axis=0)
+
+    return jax.lax.fori_loop(
+        0, tb, body, jnp.zeros((ra.shape[1], rb.shape[1]), jnp.float32)
+    )
 
 
 def _kernel(ra_ref, rb_ref, g_ref, out_ref):
@@ -39,33 +53,23 @@ def _kernel(ra_ref, rb_ref, g_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    ra = ra_ref[...]  # (TB, NB) i32
-    rb = rb_ref[...]  # (TB, NB) i32
-    g = g_ref[...]    # (TB, n) f32
-    tb = ra.shape[0]
-
-    def body(p, acc):
-        m = jnp.maximum(ra[p][:, None], rb[p][None, :])  # (NB, NB)
-        return acc + jnp.take(g[p], m, axis=0)
-
-    acc = jax.lax.fori_loop(
-        0, tb, body, jnp.zeros(out_ref.shape, jnp.float32)
-    )
-    out_ref[...] += acc
+    out_ref[...] += _tile_sum(ra_ref[...], rb_ref[...], g_ref[...])
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_n", "block_t", "interpret")
-)
-def sti_fill_pallas(
-    g: jnp.ndarray,
-    ranks: jnp.ndarray,
-    *,
-    block_n: int = 256,
-    block_t: int | None = None,
-    interpret: bool | None = None,
-) -> jnp.ndarray:
-    """out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]  -> (n, n) f32."""
+def _acc_kernel(acc_ref, ra_ref, rb_ref, g_ref, out_ref):
+    # out aliases acc's buffer (input_output_aliases={0: 0}); seed each
+    # output tile from the incoming accumulator tile on the first t-block,
+    # then read-modify-write exactly as the zero-init kernel does.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = acc_ref[...]
+
+    out_ref[...] += _tile_sum(ra_ref[...], rb_ref[...], g_ref[...])
+
+
+def _pad_inputs(g, ranks, block_n, block_t, interpret):
+    """Resolve block shapes, pad (g, ranks) to block multiples, and build
+    the (t-blocks, row-blocks, col-blocks) grid shared by both kernels."""
     t, n = g.shape
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -86,16 +90,82 @@ def sti_fill_pallas(
             ranks = ranks.at[:, n:].set(pad_ranks[None, :])
     tp, np_ = g.shape
     grid = (tp // bt, np_ // bn, np_ // bn)
+    return g, ranks, bt, bn, n_pad, grid, interpret
+
+
+def _io_specs(bt, bn, np_):
+    return [
+        pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, ia)),  # ranks_a
+        pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, jb)),  # ranks_b
+        pl.BlockSpec((bt, np_), lambda tt, ia, jb: (tt, 0)),  # g row block
+    ], pl.BlockSpec((bn, bn), lambda tt, ia, jb: (ia, jb))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_t", "interpret")
+)
+def sti_fill_pallas(
+    g: jnp.ndarray,
+    ranks: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    block_t: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]  -> (n, n) f32."""
+    n = g.shape[1]
+    g, ranks, bt, bn, _, grid, interpret = _pad_inputs(
+        g, ranks, block_n, block_t, interpret
+    )
+    np_ = g.shape[1]
+    in_specs, out_spec = _io_specs(bt, bn, np_)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, ia)),  # ranks_a
-            pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, jb)),  # ranks_b
-            pl.BlockSpec((bt, np_), lambda tt, ia, jb: (tt, 0)),  # g row block
-        ],
-        out_specs=pl.BlockSpec((bn, bn), lambda tt, ia, jb: (ia, jb)),
+        in_specs=in_specs,
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
         interpret=interpret,
     )(ranks, ranks, g)
+    return out[:n, :n]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_n", "block_t", "interpret")
+)
+def sti_fill_acc_pallas(
+    acc: jnp.ndarray,
+    g: jnp.ndarray,
+    ranks: jnp.ndarray,
+    *,
+    block_n: int = 256,
+    block_t: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """acc[a, b] += sum_p g[p, max(ranks[p, a], ranks[p, b])], in place.
+
+    The accumulator is ALIASED to the output buffer (input_output_aliases),
+    so the g-weighted updates land directly in acc's tiles: the streaming
+    step's `acc + fill(g, ranks)` second (n, n) temporary never exists.
+    When n is not a block multiple the padded copy breaks true aliasing --
+    pick block_n | n (the autotuner only proposes such shapes) to keep the
+    in-place path.
+    """
+    n = g.shape[1]
+    g, ranks, bt, bn, n_pad, grid, interpret = _pad_inputs(
+        g, ranks, block_n, block_t, interpret
+    )
+    np_ = g.shape[1]
+    if n_pad:
+        acc = jnp.pad(acc, ((0, n_pad), (0, n_pad)))
+    in_specs, out_spec = _io_specs(bt, bn, np_)
+    out = pl.pallas_call(
+        _acc_kernel,
+        grid=grid,
+        in_specs=[out_spec] + in_specs,  # acc tiles walk the output tiling
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(acc, ranks, ranks, g)
     return out[:n, :n]

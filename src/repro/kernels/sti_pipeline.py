@@ -15,11 +15,24 @@ is transferred as it is consumed). Donation is skipped on the CPU backend,
 which does not implement it (DESIGN.md Sec. 5; EXPERIMENTS.md "Fused
 pipeline" has the measurements).
 
+Every step carries a per-point validity mask folded into `u` (`g` and the
+diagonal term are linear in `u`, so a masked-out point contributes exactly
+zero): a ragged trailing batch is PADDED to the compiled batch shape by
+`pad_test_batch` instead of tracing a second shape-specialized executable.
+
     from repro.kernels.sti_pipeline import fused_sti_knn_interactions
     phi = fused_sti_knn_interactions(x_train, y_train, x_test, y_test, k=5)
 
 `make_fused_step` exposes the donated step itself for callers that drive
 their own stream (the serving engine, shard-per-host loops).
+
+`make_sharded_step` / `prepare_sharded_step` / `sharded_sti_knn_interactions`
+are the multi-device form (DESIGN.md Sec. 10): the test stream is row-sharded
+over a 1-D `compat.shard_map` mesh, the accumulator is sharded by ROW BLOCKS
+of the (n, n) matrix — (n/D, n) per device, so peak accumulator memory falls
+as 1/D — and the only per-step collective is an all-gather of the small
+(tb, n) g/rank tables; the row blocks are complete sums, so finalize needs
+one all-gather and no psum over the matrix.
 """
 
 from __future__ import annotations
@@ -31,8 +44,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sti_knn import (
-    _FILL_FNS,
     InteractionMode,
+    accumulate_fill,
     pairwise_sq_dists,
     ranks_from_order,
     resolve_fill,
@@ -43,6 +56,10 @@ __all__ = [
     "fused_sti_knn_interactions",
     "make_fused_step",
     "prepare_fused_step",
+    "pad_test_batch",
+    "make_sharded_step",
+    "prepare_sharded_step",
+    "sharded_sti_knn_interactions",
     "resolve_distance",
 ]
 
@@ -99,6 +116,44 @@ def _distance_fn(name: str, static: tuple) -> Callable:
     return functools.partial(distance_pallas, **kw)
 
 
+def pad_test_batch(xb, yb, tb: int):
+    """Pad a (possibly ragged) test batch to exactly `tb` rows and return
+    `(xb, yb, mask)` with mask 1.0 on real points, 0.0 on padding.
+
+    The step folds the mask into `u`; `g`, the fill, and the diagonal term
+    are all linear in `u`, so padded points contribute exactly zero and ONE
+    compiled step serves every batch size <= tb (no trailing-batch retrace).
+    """
+    xb = jnp.asarray(xb)
+    yb = jnp.asarray(yb)
+    b = xb.shape[0]
+    if b > tb:
+        raise ValueError(f"batch of {b} test points exceeds test_batch={tb}")
+    mask = jnp.ones((b,), jnp.float32)
+    if b == tb:
+        return xb, yb, mask
+    pad = tb - b
+    return (
+        jnp.pad(xb, ((0, pad), (0, 0))),
+        jnp.pad(yb, ((0, pad),)),
+        jnp.pad(mask, ((0, pad),)),
+    )
+
+
+def _masked_u_g_ranks(xb, yb, mask, x_train, y_train, k, mode, dist_fn):
+    """Shared stage chain of the fused and sharded steps: distance ->
+    argsort/rank -> masked u -> g. Returns (u, g, ranks); the validity mask
+    is already folded into u (and therefore into g)."""
+    d2 = dist_fn(xb, x_train)                       # (tb, n) on-chip
+    order = jnp.argsort(d2, axis=-1, stable=True)   # (tb, n)
+    ranks = ranks_from_order(order)
+    u = (y_train[order] == yb[:, None]).astype(jnp.float32) * (
+        mask / k
+    )[:, None]
+    g = superdiagonal_g(u, k, mode=mode)            # (tb, n)
+    return u, g, ranks
+
+
 @functools.lru_cache(maxsize=None)
 def make_fused_step(
     k: int,
@@ -111,28 +166,30 @@ def make_fused_step(
 ) -> Callable:
     """Build the jitted fused step:
 
-        step(acc, diag, xb, yb, x_train, y_train) -> (acc, diag)
+        step(acc, diag, xb, yb, mask, x_train, y_train) -> (acc, diag)
 
     acc (n, n) f32 and diag (n,) f32 are donated (updated in place) on
-    backends that support donation; xb/yb is one (tb, d)/(tb,) test batch.
-    All four pipeline stages trace into the one XLA program. Cached per
-    static configuration, so repeated streaming runs reuse the executable.
+    backends that support donation; xb/yb/mask is one (tb, d)/(tb,)/(tb,)
+    test batch (`pad_test_batch` builds the mask). The fill accumulates
+    through the in-place registry form where one exists (no `acc + fill`
+    temporary), and the diagonal term reuses the fill stage's `u` (gathered
+    back to train coordinates) instead of re-broadcasting the (tb, n) label
+    comparison. All four pipeline stages trace into the one XLA program.
+    Cached per static configuration, so repeated streaming runs reuse the
+    executable.
     """
-    fill_fn = functools.partial(_FILL_FNS[fill], **dict(fill_static))
     dist_fn = _distance_fn(distance, distance_static)
     if donate is None:
         donate = jax.default_backend() != "cpu"
 
-    def step(acc, diag, xb, yb, x_train, y_train):
-        d2 = dist_fn(xb, x_train)                       # (tb, n) on-chip
-        order = jnp.argsort(d2, axis=-1, stable=True)   # (tb, n)
-        ranks = ranks_from_order(order)
-        u = (y_train[order] == yb[:, None]).astype(jnp.float32) / k
-        g = superdiagonal_g(u, k, mode=mode)            # (tb, n)
-        acc = acc + fill_fn(g, ranks)
-        diag = diag + jnp.sum(
-            (y_train[None, :] == yb[:, None]).astype(jnp.float32), axis=0
-        ) / k
+    def step(acc, diag, xb, yb, mask, x_train, y_train):
+        u, g, ranks = _masked_u_g_ranks(
+            xb, yb, mask, x_train, y_train, k, mode, dist_fn
+        )
+        acc = accumulate_fill(acc, g, ranks, fill, fill_static)
+        # u in train coordinates is u[p, ranks[p, i]] = mask_p 1[y_i==y_p]/k:
+        # the diag term rides on the fill stage's u, masked for free.
+        diag = diag + jnp.sum(jnp.take_along_axis(u, ranks, axis=-1), axis=0)
         return acc, diag
 
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())
@@ -154,7 +211,7 @@ def prepare_fused_step(
     """Resolve fill/distance for an (n, d) train set streamed in batches of
     `test_batch` and return `(step, resolved)`:
 
-        step(acc, diag, xb, yb, x_train, y_train) -> (acc, diag)
+        step(acc, diag, xb, yb, mask, x_train, y_train) -> (acc, diag)
 
     plus a dict naming the concrete {"fill", "distance"} implementations (for
     result metadata). This is the per-batch unit `ValuationSession` drives for
@@ -194,8 +251,9 @@ def fused_sti_knn_interactions(
     `repro.core.sti_knn_interactions` ((n, n) matrix, diagonal = main terms).
 
     Streams ceil(t / test_batch) donated steps; a trailing partial batch is
-    processed by a shape-specialized instance of the same step (exact -- no
-    padding of test points, so t need not divide test_batch).
+    PADDED to the compiled batch shape with a zero validity mask (exact --
+    masked points contribute nothing), so one executable serves every batch
+    and t need not divide test_batch.
     """
     if x_train.ndim != 2 or x_test.ndim != 2:
         raise ValueError("features must be (num_points, dim)")
@@ -215,20 +273,247 @@ def fused_sti_knn_interactions(
     diag = jnp.zeros((n,), jnp.float32)
     x_train = jnp.asarray(x_train)
     y_train = jnp.asarray(y_train)
-    for start in range(0, t - t % tb, tb):
-        acc, diag = step(
-            acc, diag,
+    for start in range(0, t, tb):
+        xb, yb, mask = pad_test_batch(
             jnp.asarray(x_test[start : start + tb]),
             jnp.asarray(y_test[start : start + tb]),
-            x_train, y_train,
+            tb,
         )
-    rem = t % tb
-    if rem:
-        acc, diag = step(
-            acc, diag,
-            jnp.asarray(x_test[t - rem :]),
-            jnp.asarray(y_test[t - rem :]),
-            x_train, y_train,
-        )
+        acc, diag = step(acc, diag, xb, yb, mask, x_train, y_train)
     phi = acc / t
     return jnp.fill_diagonal(phi, diag / t, inplace=False)
+
+
+# ------------------------------------------------------------------ sharded
+def _block_fill_acc(acc, g, r_rows, r_all, chunk: int):
+    """acc[r, b] += sum_p g[p, max(r_rows[p, r], r_all[p, b])] for the local
+    (nl, n) row block: the rectangular, scan-carried cousin of the square
+    fills (padded test rows have g == 0, so they contribute exactly zero)."""
+    t, n = g.shape
+    nl = r_rows.shape[1]
+    chunk = max(1, min(int(chunk), t))
+    pad = (-t) % chunk
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        r_rows = jnp.pad(r_rows, ((0, pad), (0, 0)))
+        r_all = jnp.pad(r_all, ((0, pad), (0, 0)))
+
+    def one(g_p, rr_p, ra_p):
+        return g_p[jnp.maximum(rr_p[:, None], ra_p[None, :])]  # (nl, n)
+
+    def body(a, io):
+        gc, rrc, rac = io
+        return a + jnp.sum(jax.vmap(one)(gc, rrc, rac), axis=0), None
+
+    acc, _ = jax.lax.scan(
+        body,
+        acc,
+        (
+            g.reshape(-1, chunk, n),
+            r_rows.reshape(-1, chunk, nl),
+            r_all.reshape(-1, chunk, n),
+        ),
+    )
+    return acc
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_step(
+    mesh,
+    k: int,
+    mode: InteractionMode = "sti",
+    fill: str = "chunked",
+    fill_static: tuple = (),
+    distance: str = "xla",
+    distance_static: tuple = (),
+    axis: str = "shards",
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Build the jitted multi-device step over a 1-D `mesh` (axis `axis`,
+    D devices). GLOBAL contract identical to the fused step:
+
+        step(acc, diag, xb, yb, mask, x_train, y_train) -> (acc, diag)
+
+    but acc (n, n) is sharded P(axis, None) — each device OWNS an (n/D, n)
+    row block and never materializes more — diag (n,) is sharded P(axis),
+    and the (tb, d) test batch is row-sharded P(axis) (tb must be a multiple
+    of D; `prepare_sharded_step` rounds it up and `pad_test_batch` masks the
+    padding). Per device and step:
+
+      1. distance/rank/g on the LOCAL (tb/D, n) test shard;
+      2. all-gather of the small (tb, n) g / rank tables over `axis` plus a
+         reduce-scatter of the (n,) diag partial (the only per-step
+         collectives — O(tb n) bytes, never O(n^2));
+      3. rectangular fill of the local row block with ALL tb test points.
+
+    Row blocks are therefore complete sums over every test point seen: no
+    psum is needed at finalize, only an all-gather of the rows. Accumulators
+    are donated off-CPU, exactly like the fused step.
+    """
+    dist_fn = _distance_fn(distance, distance_static)
+    chunk = int(dict(fill_static).get("chunk", 1))
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def local_step(acc, diag, xb, yb, mask, x_train, y_train):
+        # local views: acc (nl, n), diag (nl,), xb (tb/D, d), mask (tb/D,)
+        nl = acc.shape[0]
+        u, g, ranks = _masked_u_g_ranks(
+            xb, yb, mask, x_train, y_train, k, mode, dist_fn
+        )
+        u_train = jnp.take_along_axis(u, ranks, axis=-1)   # (tb/D, n)
+        g_all = jax.lax.all_gather(g, axis, axis=0, tiled=True)
+        r_all = jax.lax.all_gather(ranks, axis, axis=0, tiled=True)
+        rows = jax.lax.axis_index(axis) * nl + jnp.arange(nl)
+        r_rows = jnp.take(r_all, rows, axis=1)             # (tb, nl)
+        acc = _block_fill_acc(acc, g_all, r_rows, r_all, chunk)
+        # the diag update reduces over the test dim, so it needs only a
+        # reduce-scatter of the (n,) local partial (tiled block i lands on
+        # device i = exactly this device's diag rows) -- O(n) bytes, not an
+        # O(tb n) gather like g/ranks, which the fill genuinely needs whole
+        diag = diag + jax.lax.psum_scatter(
+            jnp.sum(u_train, axis=0), axis, tiled=True
+        )
+        return acc, diag
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    step = compat.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(
+            P(axis, None),   # acc row blocks
+            P(axis),         # diag rows
+            P(axis, None),   # test batch rows
+            P(axis),         # test labels
+            P(axis),         # validity mask
+            P(None, None),   # x_train replicated
+            P(None),         # y_train replicated
+        ),
+        out_specs=(P(axis, None), P(axis)),
+        check_vma=False,
+    )
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+def prepare_sharded_step(
+    n: int,
+    d: int,
+    k: int,
+    *,
+    mesh=None,
+    shards: Optional[int] = None,
+    mode: InteractionMode = "sti",
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> tuple[Callable, dict, "jax.sharding.Mesh"]:
+    """Resolve mesh/fill/distance for the sharded engine and return
+    `(step, resolved, mesh)` where `resolved` records the concrete
+    implementations plus {"shards", "test_batch"} (test_batch rounded UP to
+    a multiple of the shard count so every device gets an equal test slice;
+    the mask absorbs the difference). Autotune lookups run at the per-device
+    (tb/D, n) slice shape and are keyed by device count (kernels/autotune),
+    so sharded shapes tune independently of single-device ones."""
+    from repro.distributed.sharding import shard_count, valuation_mesh
+
+    if mesh is None:
+        mesh = valuation_mesh(shard_count(n, shards))
+    axis = mesh.axis_names[0]
+    num = mesh.shape[axis]
+    if n % num:
+        raise ValueError(
+            f"n={n} must divide evenly into {num} row shards "
+            f"(per-device blocks are exactly (n/D, n))"
+        )
+    if fill not in ("auto", "chunked"):
+        import warnings
+
+        warnings.warn(
+            f"the sharded engine runs a rectangular block-scan fill; "
+            f"explicit fill={fill!r} contributes only its chunk size",
+            stacklevel=2,
+        )
+    tb = max(1, int(test_batch))
+    tb = -(-tb // num) * num
+    tbl = tb // num
+    # the sharded local fill is the rectangular block scan: only the chunk
+    # size carries over from the square-fill registry, so resolve WITHOUT
+    # tuning (a full candidate sweep would time kernels this step never
+    # runs); autotune=True still tunes the distance stage, which is used
+    fill_name, fill_static = resolve_fill(
+        fill, n, tbl, fill_params=fill_params, autotune=False
+    )
+    dist_name, dist_static = resolve_distance(
+        distance, tbl, n, d, distance_params=distance_params, autotune=autotune
+    )
+    step = make_sharded_step(
+        mesh, int(k), mode, fill_name, fill_static, dist_name, dist_static,
+        axis=axis,
+    )
+    resolved = {
+        # the sharded local fill is the rectangular block scan; it borrows
+        # only the chunk size from the resolved square fill
+        "fill": f"block_chunked[{dict(fill_static).get('chunk', 1)}]",
+        "distance": dist_name,
+        "shards": int(num),
+        "test_batch": int(tb),
+    }
+    return step, resolved, mesh
+
+
+def sharded_sti_knn_interactions(
+    x_train: jnp.ndarray,
+    y_train: jnp.ndarray,
+    x_test: jnp.ndarray,
+    y_test: jnp.ndarray,
+    k: int,
+    *,
+    mode: InteractionMode = "sti",
+    test_batch: int = 256,
+    shards: Optional[int] = None,
+    mesh=None,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+    return_info: bool = False,
+):
+    """STI-KNN on the sharded fused pipeline; same result contract as
+    `sti_knn_interactions`. Falls back to the single-device fused pipeline
+    when only one shard is usable (1 device, or shards=1). With
+    `return_info=True` returns `(phi, info)` where info names the resolved
+    implementations and shard count.
+
+    Thin wrapper: drives a `ShardedValuationSession` over the whole test
+    set, so device placement / padding / finalize logic lives in exactly
+    one place (the session).
+    """
+    if x_train.ndim != 2 or x_test.ndim != 2:
+        raise ValueError("features must be (num_points, dim)")
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    t = x_test.shape[0]
+    if t < 1:
+        raise ValueError("need at least one test point")
+    from repro.core.session import ShardedValuationSession
+
+    sess = ShardedValuationSession(
+        x_train, y_train, shards=shards, mesh=mesh, k=k, mode=mode,
+        test_batch=max(1, min(int(test_batch), t)), fill=fill,
+        fill_params=fill_params, distance=distance,
+        distance_params=distance_params, autotune=autotune,
+    )
+    phi = sess.update(x_test, y_test).finalize().phi
+    if return_info:
+        info = dict(sess._resolved)
+        info.setdefault("shards", sess.shards)
+        info.setdefault("test_batch", sess.test_batch)
+        return phi, info
+    return phi

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import get_method, knn_shapley_values, list_methods, loo_values
-from repro.core.session import ValuationSession
+from repro.core.session import ShardedValuationSession, ValuationSession
 from repro.data import make_circles, flip_labels
 
 
@@ -33,11 +33,17 @@ def main():
     ap.add_argument("--method", "--mode", dest="method", default="sti",
                     help=f"registered valuation method: {list_methods()}")
     ap.add_argument("--engine", default="fused",
-                    choices=["fused", "scan", "distributed"],
+                    choices=["fused", "scan", "distributed", "sharded"],
                     help="interaction engine: fused = streaming "
                          "distance->rank->g->fill pipeline with donated "
                          "accumulators; scan = single-jit path; distributed "
-                         "= shard_map production cell on the local mesh")
+                         "= shard_map production cell on the local mesh; "
+                         "sharded = multi-device fused pipeline (test "
+                         "stream + accumulator row blocks sharded, n^2/D "
+                         "accumulator memory per device)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="device count for --engine sharded (default: all "
+                         "local devices, clamped to a divisor of n)")
     ap.add_argument("--fill", default="auto",
                     help="fill registry entry (auto|chunked|onehot|xla|pallas)")
     ap.add_argument("--test-batch", type=int, default=256)
@@ -68,21 +74,29 @@ def main():
     accepted = getattr(method, "accepted_options", frozenset())
     opts = {name: value for name, value in dict(
         engine=args.engine, fill=args.fill, test_batch=args.test_batch,
-        autotune=args.autotune).items() if name in accepted}
-    # streaming runs through ValuationSession, which folds the sti/sii
-    # fused step; other methods fall back to one-shot with a note
+        autotune=args.autotune, shards=args.shards).items()
+        if name in accepted}
+    # streaming runs through a ValuationSession (sharded when --engine
+    # sharded), which folds the sti/sii step; other methods fall back to
+    # one-shot with a note
     stream_mode = getattr(method, "mode", None)
     if args.stream and stream_mode not in ("sti", "sii"):
         print(f"note: --stream needs an sti/sii interaction method; "
               f"running {args.method} one-shot")
-    elif args.stream and args.engine != "fused":
+    elif args.stream and args.engine not in ("fused", "sharded"):
         print(f"note: --stream folds the fused session step; "
               f"--engine {args.engine} ignored")
     t0 = time.time()
     if args.stream and stream_mode in ("sti", "sii"):
-        sess = ValuationSession(
-            x, y, k=args.k, mode=stream_mode, test_batch=args.test_batch,
-            fill=args.fill, autotune=args.autotune)
+        if args.engine == "sharded":
+            sess = ShardedValuationSession(
+                x, y, k=args.k, mode=stream_mode,
+                test_batch=args.test_batch, fill=args.fill,
+                autotune=args.autotune, shards=args.shards)
+        else:
+            sess = ValuationSession(
+                x, y, k=args.k, mode=stream_mode, test_batch=args.test_batch,
+                fill=args.fill, autotune=args.autotune)
         for start in range(0, args.t, args.test_batch):
             sess.update(xt[start:start + args.test_batch],
                         yt[start:start + args.test_batch])

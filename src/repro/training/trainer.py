@@ -77,19 +77,49 @@ class Trainer:
             return params, opt_state, dict(metrics, loss=loss, **om)
 
         bspec = SH.batch_spec(self.cfg, "train", self.mesh)
-        self._bsharding = {
+        # the data-sharded default; _maybe_replicate_batch swaps per fit()
+        self._bsharding_data = {
             k: jax.sharding.NamedSharding(self.mesh, v)
             for k, v in bspec.items()}
+        self._bsharding = self._bsharding_data
         opt_spec = type(jax.eval_shape(adamw_init, self.model.abstract()))(
             mu=self.pspec, nu=self.pspec,
             count=jax.sharding.PartitionSpec())
         self._osharding = SH.tree_named(self.mesh, opt_spec)
+        self._step = step
+        self._jit_step()
+
+    def _jit_step(self):
         self.step_fn = jax.jit(
-            step,
+            self._step,
             in_shardings=(self.psharding, self._osharding, self._bsharding),
             out_shardings=(self.psharding, self._osharding, None),
             donate_argnums=(0, 1),
         )
+
+    def _maybe_replicate_batch(self, probe: dict) -> None:
+        """Batch dims shard over the data axes only when divisible; a batch
+        smaller than the device grid (smoke runs under forced many-device
+        hosts) falls back to replication, mirroring lm_cell's rule. Decided
+        per fit(): a divisible batch restores the sharded default, so one
+        small smoke fit does not stick the Trainer in replicated mode."""
+        import numpy as np
+
+        dp = int(np.prod([self.mesh.shape[a]
+                          for a in SH.data_axes(self.mesh)]))
+        if dp <= 1 or all(
+            int(np.shape(v)[0]) % dp == 0 for v in probe.values()
+        ):
+            if self._bsharding is not self._bsharding_data:
+                self._bsharding = self._bsharding_data
+                self._jit_step()
+            return
+        self._bsharding = {
+            k: jax.sharding.NamedSharding(
+                self.mesh,
+                jax.sharding.PartitionSpec(*(None,) * len(np.shape(v))))
+            for k, v in probe.items()}
+        self._jit_step()
 
     def _on_retry(self, attempt, err):
         print(f"[fault-tolerance] step retry {attempt}: {err}")
@@ -122,6 +152,12 @@ class Trainer:
         from repro.data.pipeline import ShardedPrefetchLoader
 
         metrics_hist = []
+        # probe the first batch for data-axis divisibility. batch_fn MUST be
+        # deterministic in its step argument (the documented contract above:
+        # restarts and the prefetch loader re-generate data by step index),
+        # so the extra batch_fn(start_step) call sees the same data the
+        # loader will train on -- only one host-side generation is wasted
+        self._maybe_replicate_batch(batch_fn(start_step))
         loader = ShardedPrefetchLoader(
             batch_fn, self._bsharding, start_step=start_step)
         with self.mesh:

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import repro  # noqa: F401  (package import registers the Pallas fills)
 from repro.core.sti_knn import (
     _FILL_FNS,
+    accumulate_fill,
     ranks_from_distances,
     ranks_from_order,
     resolve_fill,
@@ -20,6 +21,7 @@ from repro.kernels import autotune as at
 from repro.kernels.sti_pipeline import (
     fused_sti_knn_interactions,
     make_fused_step,
+    pad_test_batch,
 )
 
 
@@ -163,11 +165,69 @@ def test_make_fused_step_streaming_accumulates():
     step = make_fused_step(k, "sti", "chunked", (("chunk", 1),))
     acc = jnp.zeros((n, n), jnp.float32)
     diag = jnp.zeros((n,), jnp.float32)
+    ones = jnp.ones((4,), jnp.float32)
     for s in range(0, t, 4):
-        acc, diag = step(acc, diag, xt[s:s + 4], yt[s:s + 4], x, y)
+        acc, diag = step(acc, diag, xt[s:s + 4], yt[s:s + 4], ones, x, y)
     phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
     want = sti_knn_interactions(x, y, xt, yt, k, fill="xla")
     np.testing.assert_allclose(np.asarray(phi), np.asarray(want), atol=1e-5)
+
+
+def test_pad_test_batch_mask_contract():
+    """pad_test_batch pads to the compiled shape; the zero mask makes padded
+    points contribute exactly nothing through the step."""
+    rng = np.random.default_rng(12)
+    n, t, k, tb = 15, 3, 2, 8
+    x, y, xt, yt = _rand_problem(rng, n, t)
+    xb, yb, mask = pad_test_batch(xt, yt, tb)
+    assert xb.shape == (tb, xt.shape[1]) and yb.shape == (tb,)
+    np.testing.assert_array_equal(np.asarray(mask), [1, 1, 1, 0, 0, 0, 0, 0])
+    step = make_fused_step(k, "sti", "chunked", (("chunk", 1),))
+    acc, diag = step(
+        jnp.zeros((n, n), jnp.float32), jnp.zeros((n,), jnp.float32),
+        xb, yb, mask, x, y,
+    )
+    phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
+    want = sti_knn_interactions(x, y, xt, yt, k, fill="xla")
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(want), atol=1e-5)
+    with pytest.raises(ValueError, match="exceeds test_batch"):
+        pad_test_batch(xt, yt, 2)
+
+
+def test_fused_single_executable_across_ragged_batches():
+    """One compiled step serves full and trailing-partial batches: the
+    trace cache of make_fused_step must not grow when t % tb != 0."""
+    rng = np.random.default_rng(13)
+    x, y, xt, yt = _rand_problem(rng, 20, 11)
+    make_fused_step.cache_clear()
+    want = sti_knn_interactions(x, y, xt, yt, 3, fill="xla")
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, 3, test_batch=4, fill="chunked", distance="xla"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    assert make_fused_step.cache_info().currsize == 1
+    step = make_fused_step(3, "sti", "chunked", (), "xla", ())
+    # 11 = 2 full batches of 4 + one padded ragged batch through ONE jit
+    assert step._cache_size() == 1
+
+
+# ------------------------------------------------------- accumulate fills
+@pytest.mark.parametrize("fill,static", [
+    ("chunked", (("chunk", 2),)),
+    ("onehot", (("chunk", 1),)),
+    ("xla", ()),
+    ("pallas", ()),
+    ("pallas_interpret", (("block_n", 16), ("block_t", 2))),
+])
+def test_accumulate_fill_matches_additive(fill, static):
+    """Every in-place accumulate form equals acc + fill(g, ranks) -- the
+    aliased Pallas variant included."""
+    rng = np.random.default_rng(21)
+    g, ranks = _rand_fill_inputs(rng, 5, 37)
+    acc = jnp.asarray(rng.normal(size=(37, 37)).astype(np.float32))
+    want = np.asarray(acc) + np.asarray(_FILL_FNS["xla"](g, ranks))
+    got = np.asarray(accumulate_fill(acc, g, ranks, fill, static))
+    np.testing.assert_allclose(got, want, atol=1e-4)
 
 
 # ---------------------------------------------------------------- autotuner
