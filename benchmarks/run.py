@@ -295,6 +295,26 @@ err = float(jnp.max(jnp.abs(
     fused_sti_knn_interactions(x, y, xt, yt, k, test_batch=tb)
     - sharded_sti_knn_interactions(x, y, xt, yt, k, test_batch=tb))))
 print(f"ROW,{{jax.device_count()}},{{us_fused:.1f}},{{us_shard:.1f}},{{err:.2e}}")
+
+# rect-fill comparison: the sharded local row-block update through the XLA
+# block scan vs the rectangular Pallas accumulate kernel. Off-TPU the Pallas
+# row runs in INTERPRET mode (correctness trend only, Python-speed) at a
+# small shape; on TPU the same two rows measure the real kernel.
+nr, tr, tbr = ({n}, {t}, {tb}) if jax.default_backend() == "tpu" else (256, 16, 16)
+xr = jnp.asarray(rng.normal(size=(nr, 16)).astype(np.float32))
+yr = jnp.asarray(rng.integers(0, 2, nr).astype(np.int32))
+xtr = jnp.asarray(rng.normal(size=(tr, 16)).astype(np.float32))
+ytr = jnp.asarray(rng.integers(0, 2, tr).astype(np.int32))
+us_rect_scan = timeit(lambda: sharded_sti_knn_interactions(
+    xr, yr, xtr, ytr, k, test_batch=tbr, fill="chunked", distance="xla"))
+us_rect_pal = timeit(lambda: sharded_sti_knn_interactions(
+    xr, yr, xtr, ytr, k, test_batch=tbr, fill="pallas", distance="xla"))
+err_rect = float(jnp.max(jnp.abs(
+    sharded_sti_knn_interactions(xr, yr, xtr, ytr, k, test_batch=tbr,
+                                 fill="chunked", distance="xla")
+    - sharded_sti_knn_interactions(xr, yr, xtr, ytr, k, test_batch=tbr,
+                                   fill="pallas", distance="xla"))))
+print(f"RECT,{{nr}},{{tr}},{{us_rect_scan:.1f}},{{us_rect_pal:.1f}},{{err_rect:.2e}}")
 """
     env = dict(
         os.environ,
@@ -310,8 +330,13 @@ print(f"ROW,{{jax.device_count()}},{{us_fused:.1f}},{{us_shard:.1f}},{{err:.2e}}
     dev, us_fused, us_shard, err = [
         ln for ln in p.stdout.splitlines() if ln.startswith("ROW,")
     ][0].split(",")[1:]
+    nr, tr, us_rect_scan, us_rect_pal, err_rect = [
+        ln for ln in p.stdout.splitlines() if ln.startswith("RECT,")
+    ][0].split(",")[1:]
     dev = int(dev)
     per_dev_mb = n * n * 4 / dev / 2**20
+    pal_mode = ("compiled" if jax.default_backend() == "tpu"
+                else "interpret (correctness only; perf target is TPU)")
     return [
         (f"sti_fused_1dev_n{n}_t{t}", float(us_fused),
          f"acc_mem={n*n*4/2**20:.1f}MiB",
@@ -319,6 +344,13 @@ print(f"ROW,{{jax.device_count()}},{{us_fused:.1f}},{{us_shard:.1f}},{{err:.2e}}
         (f"sti_sharded_{dev}dev_n{n}_t{t}", float(us_shard),
          f"acc_mem_per_dev={per_dev_mb:.2f}MiB;max_err_vs_fused={err};"
          f"forced_host_devices={dev}",
+         {"method": "sti", "engine": "sharded"}),
+        (f"sti_sharded_{dev}dev_xla_scan_fill_n{nr}_t{tr}",
+         float(us_rect_scan), "fill=rect_chunked(XLA block scan)",
+         {"method": "sti", "engine": "sharded"}),
+        (f"sti_sharded_{dev}dev_pallas_fill_n{nr}_t{tr}",
+         float(us_rect_pal),
+         f"fill=rect_pallas({pal_mode});max_err_vs_scan={err_rect}",
          {"method": "sti", "engine": "sharded"}),
     ]
 

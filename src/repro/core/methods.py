@@ -70,6 +70,9 @@ def register_method(name: str, method: ValuationMethod) -> None:
 
 
 def get_method(name: str) -> ValuationMethod:
+    """Resolve a registered valuation method by name ("sti", "sii",
+    "knn_shapley", "wknn", "loo", or anything added via `register_method`);
+    raises ValueError naming the registered methods on a miss."""
     if name not in _METHODS:
         raise ValueError(
             f"unknown valuation method {name!r}; registered: "
@@ -79,6 +82,7 @@ def get_method(name: str) -> ValuationMethod:
 
 
 def list_methods() -> list[str]:
+    """Sorted names of every registered valuation method."""
     return sorted(_METHODS)
 
 

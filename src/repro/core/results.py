@@ -66,6 +66,7 @@ class ValuationResult:
     # ------------------------------------------------------------- accessors
     @property
     def n(self) -> int:
+        """Number of valued train points (rows of phi / point_values)."""
         a = self.phi if self.phi is not None else self.point_values
         return int(a.shape[0])
 
@@ -83,6 +84,8 @@ class ValuationResult:
         return d + 0.5 * (jnp.sum(self.phi, axis=1) - d)
 
     def interaction_matrix(self) -> jnp.ndarray:
+        """(n, n) pair-interaction matrix (diagonal = main terms); raises
+        for per-point-only methods, which have no matrix to return."""
         if self.phi is None:
             raise ValueError(
                 f"method {self.method!r} produced per-point values only -- "
@@ -108,6 +111,8 @@ class ValuationResult:
         return -self.point_values
 
     def class_block_summary(self, labels, num_classes: int):
+        """Mean interaction per (class, class) block of phi -- the paper's
+        Fig. 3/4 in-class vs out-of-class structure analysis."""
         return analysis.class_block_summary(
             self.interaction_matrix(), labels, num_classes
         )
@@ -163,6 +168,8 @@ class ValuationResult:
 
     @classmethod
     def load(cls, path) -> "ValuationResult":
+        """Rebuild a saved result from its `<path>.npz` + `<path>.json`
+        pair (the inverse of `save`; either suffix form is accepted)."""
         base = Path(path)
         if base.suffix == ".npz":
             base = base.with_suffix("")
@@ -177,4 +184,5 @@ class ValuationResult:
         )
 
     def replace(self, **kw) -> "ValuationResult":
+        """Functional update: a copy with the given fields replaced."""
         return dataclasses.replace(self, **kw)

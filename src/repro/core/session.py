@@ -206,8 +206,9 @@ class ValuationSession:
         # default to the checkpoint's RESOLVED fill/distance so the restored
         # session runs the same (possibly autotuned) implementations; the
         # caller may override, e.g. when restoring on a different backend.
-        # (The sharded engine reports its rectangular block fill under a
-        # descriptive non-registry name -- leave those to re-resolve.)
+        # (The sharded engine reports its fill under a rect_-prefixed name
+        # from the rectangular registry -- leave those to re-resolve, or
+        # pass fill= explicitly to pin a rect variant.)
         from repro.core.sti_knn import _FILL_FNS
 
         for opt in ("fill", "distance"):
@@ -269,7 +270,18 @@ class ShardedValuationSession(ValuationSession):
         else:
             self.shards = shard_count(n, self._requested_shards)
         if self.shards <= 1:
-            # single-host fallback: the fused step IS the 1-shard layout
+            # single-host fallback: the fused step IS the 1-shard layout.
+            # Rect-registry hints (block_rows/block_cols) are layout hints
+            # for the sharded fill -- drop whatever the square fill cannot
+            # accept so a sharded invocation runs unchanged on a 1-device
+            # host instead of raising.
+            if fill_params and fill != "auto":
+                from repro.core.sti_knn import _FILL_FNS, _accepted_params
+
+                if fill in _FILL_FNS:
+                    fill_params = _accepted_params(
+                        _FILL_FNS[fill], fill_params
+                    )
             super()._build(fill, fill_params, distance, distance_params,
                            autotune)
             self._resolved = dict(self._resolved, shards=1)

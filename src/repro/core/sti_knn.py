@@ -41,6 +41,10 @@ __all__ = [
     "register_acc_fill_fn",
     "accumulate_fill",
     "resolve_fill",
+    "register_rect_fill_fn",
+    "register_rect_acc_fill_fn",
+    "accumulate_rect_fill",
+    "resolve_rect_fill",
     "InteractionMode",
 ]
 
@@ -243,6 +247,66 @@ def _acc_fill_onehot(acc, g, ranks, *, chunk: int = 1) -> jnp.ndarray:
     return _scan_fill(_onehot_one(g.shape[-1]), g, ranks, chunk, acc0=acc)
 
 
+# ------------------------------------------------------- rectangular fills
+# A RECT fill computes out[a, b] = sum_p g[p, max(r_rows[p,a], r_cols[p,b])]
+# for INDEPENDENT row/column index bases over the same global rank space:
+# the sharded engine's per-device (n/D, n) row-block update is
+# `r_rows = ranks[:, rows_of_this_device]`, `r_cols = ranks`. The square
+# fills above are the r_rows == r_cols special case.
+def _rect_one(g_p, rr_p, rc_p):
+    """Per-test-point rectangular block: (n_rows, n_cols) max-gather."""
+    return g_p[jnp.maximum(rr_p[:, None], rc_p[None, :])]
+
+
+def _rect_fill_xla(g, r_rows, r_cols) -> jnp.ndarray:
+    """Rectangular reference fill: materializes the (t, n_rows, n_cols)
+    gather. Correctness oracle for the streaming/Pallas rect variants."""
+    return jnp.sum(jax.vmap(_rect_one)(g, r_rows, r_cols), axis=0)
+
+
+def _scan_rect_fill(g, r_rows, r_cols, chunk: int, acc0=None) -> jnp.ndarray:
+    """Rect twin of `_scan_fill`: lax.scan `chunk` test points at a time into
+    an (n_rows, n_cols) accumulator (padded test rows have g == 0, so they
+    contribute exactly zero). `acc0` seeds the scan carry (the in-place
+    accumulate form); None starts from zeros."""
+    t, n = g.shape
+    nr, nc = r_rows.shape[1], r_cols.shape[1]
+    chunk = max(1, min(int(chunk), t))
+    g = g.astype(jnp.float32)
+    pad = (-t) % chunk
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        r_rows = jnp.pad(r_rows, ((0, pad), (0, 0)))
+        r_cols = jnp.pad(r_cols, ((0, pad), (0, 0)))
+
+    def body(acc, batch):
+        gc, rrc, rcc = batch
+        return acc + jnp.sum(jax.vmap(_rect_one)(gc, rrc, rcc), axis=0), None
+
+    acc, _ = jax.lax.scan(
+        body,
+        jnp.zeros((nr, nc), jnp.float32) if acc0 is None else acc0,
+        (
+            g.reshape(-1, chunk, n),
+            r_rows.reshape(-1, chunk, nr),
+            r_cols.reshape(-1, chunk, nc),
+        ),
+    )
+    return acc
+
+
+def _rect_fill_chunked(g, r_rows, r_cols, *, chunk: int = 1) -> jnp.ndarray:
+    """Chunked rect scan fill: constant memory in t, peak
+    O(chunk * n_rows * n_cols). The sharded engine's XLA fallback path."""
+    return _scan_rect_fill(g, r_rows, r_cols, chunk)
+
+
+def _rect_acc_fill_chunked(acc, g, r_rows, r_cols, *, chunk: int = 1):
+    """In-place form of the chunked rect fill: the scan carry is the
+    caller's (n_rows, n_cols) block, so no second temporary exists."""
+    return _scan_rect_fill(g, r_rows, r_cols, chunk, acc0=acc)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "mode", "test_batch", "fill_fn_name", "fill_static"),
@@ -327,6 +391,106 @@ def accumulate_fill(acc, g, ranks, fill: str, fill_static: tuple = ()):
     if fn is not None:
         return fn(acc, g, ranks, **dict(fill_static))
     return acc + _FILL_FNS[fill](g, ranks, **dict(fill_static))
+
+
+# Rectangular fill registries, mirroring _FILL_FNS/_ACC_FILL_FNS one level
+# down in generality: `fn(g, r_rows, r_cols, **static) -> (n_rows, n_cols)`
+# and the in-place accumulate form `fn(acc, g, r_rows, r_cols, **static)`.
+# "chunked" is the XLA block scan (the sharded engine's universal fallback);
+# the Pallas rect kernels register as "pallas"/"pallas_interpret" when
+# repro.kernels is imported (repro/__init__ does).
+_RECT_FILL_FNS: dict[str, Callable] = {
+    "xla": _rect_fill_xla,
+    "chunked": _rect_fill_chunked,
+}
+
+_RECT_ACC_FILL_FNS: dict[str, Callable] = {
+    "chunked": _rect_acc_fill_chunked,
+}
+
+
+def register_rect_fill_fn(name: str, fn: Callable) -> None:
+    """Register a rectangular fill:
+    `fn(g, r_rows, r_cols, **static_params) -> (n_rows, n_cols) f32` with
+    hashable static params (they become part of the jit cache key)."""
+    _RECT_FILL_FNS[name] = fn
+
+
+def register_rect_acc_fill_fn(name: str, fn: Callable) -> None:
+    """Register the in-place accumulate form of rect fill `name`:
+    `fn(acc, g, r_rows, r_cols, **static_params) -> acc` must equal
+    `acc + _RECT_FILL_FNS[name](g, r_rows, r_cols, **static_params)`."""
+    _RECT_ACC_FILL_FNS[name] = fn
+
+
+def accumulate_rect_fill(acc, g, r_rows, r_cols, fill: str,
+                         fill_static: tuple = ()):
+    """acc += rect_fill(g, r_rows, r_cols), via the registered in-place
+    accumulate form when one exists (no (n_rows, n_cols) temporary) and the
+    additive fallback otherwise. This is the sharded step's local row-block
+    update: acc is the device's (n/D, n) block."""
+    fn = _RECT_ACC_FILL_FNS.get(fill)
+    if fn is not None:
+        return fn(acc, g, r_rows, r_cols, **dict(fill_static))
+    return acc + _RECT_FILL_FNS[fill](g, r_rows, r_cols, **dict(fill_static))
+
+
+def resolve_rect_fill(
+    fill: str,
+    n_rows: int,
+    n_cols: int,
+    t: int,
+    *,
+    fill_params: Optional[dict] = None,
+    autotune: bool = False,
+) -> tuple[str, tuple]:
+    """Resolve a rect fill request to (registry_name, hashable static params).
+
+    "auto" consults the autotune cache under the rectangular key (the
+    `rows{R}` segment alongside backend/device-count/size buckets); a miss
+    runs the tuner (autotune=True) or falls back to the backend heuristic.
+    A Pallas request on a build where the Pallas rect kernels never
+    registered falls back to the XLA block scan ("chunked") instead of
+    failing -- the sharded engine must run everywhere.
+    """
+    params = dict(fill_params or {})
+    if fill == "auto":
+        from repro.kernels.autotune import best_rect_fill  # lazy: no cycle
+
+        name, tuned = best_rect_fill(n_rows, n_cols, t, allow_tune=autotune)
+        tuned.update(params)
+        params = _accepted_params(_RECT_FILL_FNS[name], tuned)
+        fill = name
+    if fill not in _RECT_FILL_FNS:
+        if fill.startswith("pallas") or fill in _FILL_FNS:
+            # two legitimate misses, both resolved to the XLA block scan:
+            # a Pallas request on a build where the kernels never imported,
+            # and a SQUARE registry name with no rect twin (e.g. "onehot"
+            # restored from a single-device checkpoint) -- the sharded
+            # engine must keep running in both cases.
+            if fill in _FILL_FNS and fill not in ("pallas",
+                                                  "pallas_interpret"):
+                import warnings
+
+                warnings.warn(
+                    f"fill {fill!r} has no rectangular variant; the "
+                    f"sharded engine runs the XLA block scan instead",
+                    stacklevel=2,
+                )
+            fill, params = "chunked", _accepted_params(
+                _RECT_FILL_FNS["chunked"], params
+            )
+        else:
+            raise ValueError(
+                f"unknown rect fill {fill!r}; registered: "
+                f"{sorted(_RECT_FILL_FNS)}"
+            )
+    bad = set(params) - set(_accepted_params(_RECT_FILL_FNS[fill], params))
+    if bad:
+        raise ValueError(
+            f"rect fill {fill!r} does not accept params {sorted(bad)}"
+        )
+    return fill, tuple(sorted(params.items()))
 
 
 def _accepted_params(fn: Callable, params: dict) -> dict:

@@ -31,10 +31,14 @@ __all__ = ["rules_for", "strategy_for", "batch_spec", "cache_pytree_spec",
 
 
 def data_axes(mesh: Mesh):
+    """The mesh's data-parallel axes, in ('pod', 'data') order, restricted
+    to the axes this mesh actually has."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
 def rules_for(cfg: ModelConfig, strategy: str, mesh: Mesh) -> dict:
+    """Logical-axis -> mesh-axis table for `strategy` ("tp_dp" replicates
+    weights over data; "fsdp" additionally shards the embed dim)."""
     da = data_axes(mesh)
     if strategy == "fsdp":
         rules = dict(FSDP_RULES, embed=da)
@@ -164,14 +168,18 @@ def stream_sharding(mesh: Mesh, *, axis: str = VALUATION_AXIS) -> NamedSharding:
 
 
 def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement on `mesh` (train features/labels; the
+    gathered accumulator at finalize)."""
     return NamedSharding(mesh, P())
 
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:
+    """Bind one PartitionSpec to `mesh` as a NamedSharding."""
     return NamedSharding(mesh, spec)
 
 
 def tree_named(mesh: Mesh, spec_tree_):
+    """Bind a pytree of PartitionSpecs to `mesh` (leaf-wise `named`)."""
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree_,
         is_leaf=lambda x: isinstance(x, P))

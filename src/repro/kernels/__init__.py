@@ -1,5 +1,11 @@
 from repro.kernels import autotune, ops, ref
-from repro.kernels.sti_fill import sti_fill_acc_pallas, sti_fill_pallas
+from repro.kernels.sti_fill import (
+    rect_row_view,
+    sti_fill_acc_pallas,
+    sti_fill_acc_rect_pallas,
+    sti_fill_pallas,
+    sti_fill_rect_pallas,
+)
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.sti_pipeline import (
@@ -15,6 +21,9 @@ __all__ = [
     "ref",
     "sti_fill_pallas",
     "sti_fill_acc_pallas",
+    "sti_fill_rect_pallas",
+    "sti_fill_acc_rect_pallas",
+    "rect_row_view",
     "distance_pallas",
     "flash_attention_pallas",
     "fused_sti_knn_interactions",

@@ -38,6 +38,10 @@ __all__ = [
     "autotune_fill",
     "lookup_fill",
     "best_fill",
+    "rect_fill_candidates",
+    "autotune_rect_fill",
+    "lookup_rect_fill",
+    "best_rect_fill",
     "distance_candidates",
     "autotune_distance",
     "best_distance",
@@ -50,6 +54,8 @@ _SAMPLE_T = 16
 
 
 def cache_path(path: Optional[str] = None) -> str:
+    """Resolve the cache file path: explicit arg > $REPRO_AUTOTUNE_CACHE >
+    ~/.cache/repro/autotune.json."""
     if path is not None:
         return path
     env = os.environ.get("REPRO_AUTOTUNE_CACHE")
@@ -101,6 +107,8 @@ def _save(path: Optional[str], data: dict) -> None:
 
 
 def clear_cache(path: Optional[str] = None) -> None:
+    """Delete the cache file (and its in-process memo); next resolve falls
+    back to the backend heuristic until re-tuned."""
     _MEMO.pop(cache_path(path), None)
     try:
         os.unlink(cache_path(path))
@@ -114,13 +122,17 @@ def _bucket(x: int) -> int:
 
 
 def _key(kind: str, backend: str, n: int, t: int,
-         devices: Optional[int] = None) -> str:
+         devices: Optional[int] = None, rows: Optional[int] = None) -> str:
     """Cache key. Entries are keyed by the visible DEVICE COUNT as well as
     backend and bucketed sizes: the sharded engine executes its stages on
     (t/D, n) and (n/D, n) slices, so a winner tuned single-device must not
-    leak into multi-device runs (and vice versa)."""
+    leak into multi-device runs (and vice versa). Rectangular fills add a
+    `rows{R}` segment (the bucketed per-device row-block height): a winner
+    for an (n/8, n) block must not leak into (n/256, n) runs that share the
+    same n/t buckets."""
     d = jax.device_count() if devices is None else int(devices)
-    return f"{kind}:{backend}:dev{d}:n{_bucket(n)}:t{_bucket(t)}"
+    r = "" if rows is None else f"rows{_bucket(rows)}:"
+    return f"{kind}:{backend}:dev{d}:{r}n{_bucket(n)}:t{_bucket(t)}"
 
 
 def _time_call(fn, *args, reps: int = 2) -> float:
@@ -165,6 +177,8 @@ def fill_candidates(n: int, t: int, backend: str) -> list[tuple[str, dict]]:
 
 
 def default_fill(backend: str) -> tuple[str, dict]:
+    """Backend heuristic on a cache miss: Pallas on TPU, chunked scan
+    (chunk=1) elsewhere."""
     if backend == "tpu":
         return "pallas", {}
     return "chunked", {"chunk": 1}
@@ -223,6 +237,7 @@ def autotune_fill(
 def lookup_fill(
     n: int, t: int, *, backend: Optional[str] = None, path: Optional[str] = None
 ) -> Optional[tuple[str, dict]]:
+    """Cached square-fill winner for this (n, t, backend), or None."""
     backend = backend or jax.default_backend()
     entry = _load(path).get(_key("fill", backend, n, t))
     if not isinstance(entry, dict) or "fill" not in entry:
@@ -253,8 +268,138 @@ def best_fill(
     return name, params
 
 
+# -------------------------------------------------------------- rect fill --
+def rect_fill_candidates(rows: int, n: int, t: int,
+                         backend: str) -> list[tuple[str, dict]]:
+    """Candidate (rect_registry_name, static_params) per backend for the
+    sharded engine's (rows, n) row-block fill. Pallas block shapes are
+    TPU-only (interpret mode would be timed as Python and always lose).
+    A block candidate is only proposed when it preserves the aliased
+    in-place path (`sti_fill_acc_rect_pallas` pads -- and therefore
+    copies -- the accumulator unless block_rows | rows and
+    block_cols | n): either the block divides the extent, or it exceeds
+    it and clamps to the full extent (which divides trivially)."""
+    cands: list[tuple[str, dict]] = [
+        ("chunked", {"chunk": c}) for c in (1, 2, 4, 8) if c <= max(1, t)
+    ]
+
+    def aligned(block: int, extent: int) -> bool:
+        return extent % block == 0 or block >= extent
+
+    if backend == "tpu":
+        for br in (128, 256):
+            for bc in (256, 512):
+                if aligned(br, rows) and aligned(bc, n):
+                    cands.append(
+                        ("pallas", {"block_rows": br, "block_cols": bc})
+                    )
+    return cands
+
+
+def default_rect_fill(backend: str) -> tuple[str, dict]:
+    """Backend heuristic on a cache miss: the Pallas rect kernel on TPU,
+    the XLA block scan elsewhere."""
+    if backend == "tpu":
+        return "pallas", {}
+    return "chunked", {"chunk": 1}
+
+
+def _synthetic_rect_fill_problem(rows: int, n: int, ts: int):
+    g, ranks = _synthetic_fill_problem(n, ts)
+    return g, ranks[:, : max(1, min(rows, n))], ranks
+
+
+def autotune_rect_fill(
+    rows: int,
+    n: int,
+    t: int,
+    *,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> tuple[str, dict]:
+    """Time every rect fill candidate at this (rows, n, t, backend) and
+    persist the winner under the `rows{R}`-segmented key."""
+    from repro.core.sti_knn import _RECT_FILL_FNS
+
+    backend = backend or jax.default_backend()
+    ts = int(min(max(1, t), _SAMPLE_T))
+    g, r_rows, r_cols = _synthetic_rect_fill_problem(rows, n, ts)
+    timings: dict[str, float] = {}
+    for name, params in rect_fill_candidates(rows, n, ts, backend):
+        if name not in _RECT_FILL_FNS:
+            continue
+        fn = jax.jit(functools.partial(_RECT_FILL_FNS[name], **params))
+        try:
+            us = _time_call(fn, g, r_rows, r_cols, reps=reps)
+        except Exception:  # candidate unsupported on this backend
+            continue
+        timings[f"{name} {json.dumps(params, sort_keys=True)}"] = us
+        if verbose:
+            print(f"autotune rect fill rows={rows} n={n} t={t} "
+                  f"{name} {params}: {us:.0f}us")
+    if not timings:
+        return default_rect_fill(backend)
+    winner = min(timings, key=timings.get)
+    name, params_json = winner.split(" ", 1)
+    params = json.loads(params_json)
+    entry = {
+        "fill": name,
+        "params": params,
+        "us": timings[winner],
+        "sample_t": ts,
+        "candidates": timings,
+    }
+    with _LOCK:
+        data = dict(_load(path))
+        data[_key("rectfill", backend, n, t, rows=rows)] = entry
+        _save(path, data)
+    return name, params
+
+
+def lookup_rect_fill(
+    rows: int, n: int, t: int, *, backend: Optional[str] = None,
+    path: Optional[str] = None,
+) -> Optional[tuple[str, dict]]:
+    """Cached rect-fill winner for this (rows, n, t, backend), or None."""
+    backend = backend or jax.default_backend()
+    entry = _load(path).get(_key("rectfill", backend, n, t, rows=rows))
+    if not isinstance(entry, dict) or "fill" not in entry:
+        return None
+    return str(entry["fill"]), dict(entry.get("params") or {})
+
+
+def best_rect_fill(
+    rows: int,
+    n: int,
+    t: int,
+    *,
+    backend: Optional[str] = None,
+    allow_tune: bool = False,
+    path: Optional[str] = None,
+) -> tuple[str, dict]:
+    """Cache hit > (optional) fresh tune > backend heuristic, for the
+    sharded engine's rectangular (rows, n) row-block fill."""
+    from repro.core.sti_knn import _RECT_FILL_FNS
+
+    backend = backend or jax.default_backend()
+    hit = lookup_rect_fill(rows, n, t, backend=backend, path=path)
+    if hit is not None and hit[0] in _RECT_FILL_FNS:
+        return hit
+    if allow_tune:
+        return autotune_rect_fill(rows, n, t, backend=backend, path=path)
+    name, params = default_rect_fill(backend)
+    if name not in _RECT_FILL_FNS:  # pallas not registered: XLA block scan
+        name, params = "chunked", {"chunk": 1}
+    return name, params
+
+
 # ------------------------------------------------------------- distance ----
 def distance_candidates(backend: str) -> list[tuple[str, dict]]:
+    """Candidate (impl_name, static_params) for the distance stage; the
+    Pallas block grid is TPU-only (the XLA expansion wins by construction
+    elsewhere, so there is nothing to measure)."""
     if backend != "tpu":
         # interpret-mode Pallas is Python-speed; XLA's fused expansion wins
         # by construction off-TPU, so there is nothing to measure.
@@ -321,6 +466,8 @@ def best_distance(
     allow_tune: bool = False,
     path: Optional[str] = None,
 ) -> tuple[str, dict]:
+    """Cache hit > (optional) fresh tune > backend heuristic, for the
+    (t, n) x d distance stage."""
     backend = backend or jax.default_backend()
     entry = _load(path).get(_key(f"distance_d{d}", backend, n, t))
     if isinstance(entry, dict) and "distance" in entry:

@@ -13,10 +13,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.sti_fill import sti_fill_acc_pallas, sti_fill_pallas
+from repro.kernels.sti_fill import (
+    sti_fill_acc_pallas,
+    sti_fill_acc_rect_pallas,
+    sti_fill_pallas,
+    sti_fill_rect_pallas,
+)
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.core.sti_knn import register_acc_fill_fn, register_fill_fn
+from repro.core.sti_knn import (
+    register_acc_fill_fn,
+    register_fill_fn,
+    register_rect_acc_fill_fn,
+    register_rect_fill_fn,
+)
 
 __all__ = [
     "sti_fill",
@@ -93,3 +103,53 @@ register_fill_fn("pallas_interpret", _pallas_fill_interpret)
 # into the donated accumulator (no `acc + fill(...)` temporary)
 register_acc_fill_fn("pallas", _pallas_acc_fill)
 register_acc_fill_fn("pallas_interpret", _pallas_acc_fill_interpret)
+
+
+# Rectangular twins for the sharded engine's (n/D, n) row-block update:
+# same registry pattern, independent row/column index bases.
+def _pallas_rect_fill(
+    g, r_rows, r_cols, *, block_rows: int = 256, block_cols: int = 256,
+    block_t: int | None = None,
+):
+    return sti_fill_rect_pallas(
+        g, r_rows, r_cols, block_rows=block_rows, block_cols=block_cols,
+        block_t=block_t,
+    )
+
+
+def _pallas_rect_fill_interpret(
+    g, r_rows, r_cols, *, block_rows: int = 256, block_cols: int = 256,
+    block_t: int | None = None,
+):
+    return sti_fill_rect_pallas(
+        g, r_rows, r_cols, block_rows=block_rows, block_cols=block_cols,
+        block_t=block_t, interpret=True,
+    )
+
+
+def _pallas_rect_acc_fill(
+    acc, g, r_rows, r_cols, *, block_rows: int = 256, block_cols: int = 256,
+    block_t: int | None = None,
+):
+    return sti_fill_acc_rect_pallas(
+        acc, g, r_rows, r_cols, block_rows=block_rows,
+        block_cols=block_cols, block_t=block_t,
+    )
+
+
+def _pallas_rect_acc_fill_interpret(
+    acc, g, r_rows, r_cols, *, block_rows: int = 256, block_cols: int = 256,
+    block_t: int | None = None,
+):
+    return sti_fill_acc_rect_pallas(
+        acc, g, r_rows, r_cols, block_rows=block_rows,
+        block_cols=block_cols, block_t=block_t, interpret=True,
+    )
+
+
+register_rect_fill_fn("pallas", _pallas_rect_fill)
+register_rect_fill_fn("pallas_interpret", _pallas_rect_fill_interpret)
+register_rect_acc_fill_fn("pallas", _pallas_rect_acc_fill)
+register_rect_acc_fill_fn(
+    "pallas_interpret", _pallas_rect_acc_fill_interpret
+)

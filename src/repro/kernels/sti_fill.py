@@ -1,20 +1,32 @@
-"""Pallas TPU kernel for the STI-KNN t*n^2 accumulation (the hot loop).
+"""Pallas TPU kernel family for the STI-KNN t*n^2 accumulation (the hot loop).
 
-Computes  out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]
-without materializing the (t, n, n) intermediate.
+Computes  out[a, b] = sum_p g[p, max(r_rows[p, a], r_cols[p, b])]
+without materializing the (t, n_rows, n_cols) intermediate.
 
-Grid layout: (t/TB, n/NB, n/NB) with the TEST dimension OUTERMOST: the
-(TB, n) g table block is fetched once per t-block and stays VMEM-resident
+The kernels are RECTANGULAR: the row and column index bases are independent
+rank tables, so the same kernel serves
+
+  * the square single-device fill — r_rows is r_cols is the full (t, n)
+    rank table, out is (n, n) (`sti_fill_pallas` / `sti_fill_acc_pallas`);
+  * the sharded engine's per-device row-block update — r_rows is the
+    (t, n/D) view of the global ranks at this device's rows (a
+    `row_offset`/`row_count` window over the rank space, see
+    `rect_row_view`), r_cols is the full table, out is the (n/D, n) local
+    accumulator block (`sti_fill_rect_pallas` / `sti_fill_acc_rect_pallas`).
+
+Grid layout: (t/TB, n_rows/BR, n_cols/BC) with the TEST dimension OUTERMOST:
+the (TB, n) g table block is fetched once per t-block and stays VMEM-resident
 across all output tiles (consecutive grid steps with an unchanged input
-block index are not re-copied), while each (NB, NB) output tile is
+block index are not re-copied), while each (BR, BC) output tile is
 read-modify-written once per t-block.
 
-HBM traffic ~= 2*(t/TB)*n*n_cols + t*n  (vs t*n^2 materialized by the XLA
-path, and vs (n*n_cols/NB^2)*t*n if t were innermost -- the g re-fetch
-would dominate at production sizes; see EXPERIMENTS.md §Perf cell 2).
+HBM traffic ~= 2*(t/TB)*n_rows*n_cols + t*n  (vs t*n_rows*n_cols
+materialized by the XLA path, and vs (n_rows*n_cols/(BR*BC))*t*n if t were
+innermost -- the g re-fetch would dominate at production sizes; see
+EXPERIMENTS.md §Perf cell 2).
 
 Per grid step the kernel holds in VMEM:
-  ranks_a (TB, NB) i32, ranks_b (TB, NB) i32, g (TB, n) f32, out (NB, NB) f32
+  r_rows (TB, BR) i32, r_cols (TB, BC) i32, g (TB, n) f32, out (BR, BC) f32
 so the wrapper picks TB such that TB * n * 4B fits the VMEM budget.
 
 The inner gather g_p[max-outer] is a vector gather from a VMEM-resident
@@ -31,16 +43,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["sti_fill_pallas", "sti_fill_acc_pallas"]
+__all__ = [
+    "sti_fill_pallas",
+    "sti_fill_acc_pallas",
+    "sti_fill_rect_pallas",
+    "sti_fill_acc_rect_pallas",
+    "rect_row_view",
+]
 
 
 def _tile_sum(ra, rb, g):
     """sum_p g[p, max(ra[p], rb[p])] over the tile's test block: the shared
-    inner loop of the zero-init and accumulate kernels."""
+    inner loop of the zero-init and accumulate kernels. `ra` (TB, BR) and
+    `rb` (TB, BC) may have different widths (rectangular tiles)."""
     tb = ra.shape[0]
 
     def body(p, acc):
-        m = jnp.maximum(ra[p][:, None], rb[p][None, :])  # (NB, NB)
+        m = jnp.maximum(ra[p][:, None], rb[p][None, :])  # (BR, BC)
         return acc + jnp.take(g[p], m, axis=0)
 
     return jax.lax.fori_loop(
@@ -67,38 +86,99 @@ def _acc_kernel(acc_ref, ra_ref, rb_ref, g_ref, out_ref):
     out_ref[...] += _tile_sum(ra_ref[...], rb_ref[...], g_ref[...])
 
 
-def _pad_inputs(g, ranks, block_n, block_t, interpret):
-    """Resolve block shapes, pad (g, ranks) to block multiples, and build
-    the (t-blocks, row-blocks, col-blocks) grid shared by both kernels."""
+def rect_row_view(ranks: jnp.ndarray, row_offset, row_count: int) -> jnp.ndarray:
+    """(t, n) global rank table -> its (t, row_count) window starting at
+    global row `row_offset`: the row index base of a rectangular fill.
+
+    `row_offset` may be traced (e.g. `jax.lax.axis_index(axis) * row_count`
+    inside a shard_map body); `row_count` must be static.
+    """
+    return jax.lax.dynamic_slice_in_dim(
+        ranks, row_offset, int(row_count), axis=1
+    )
+
+
+def _pad_rect_inputs(g, r_rows, r_cols, block_r, block_c, block_t, interpret):
+    """Resolve block shapes, pad the inputs to block multiples, and build the
+    (t-blocks, row-blocks, col-blocks) grid shared by all four kernels.
+
+    Padding rules: the test dim pads with g == 0 rows (exactly zero
+    contribution); padded row/col rank entries are zeros (in-range gathers
+    whose output rows/cols the wrappers slice off); g's gather width pads to
+    the column-block multiple so the lane dim stays block-aligned on TPU
+    (rank values stay < n, so real entries never gather a padded column).
+    """
     t, n = g.shape
+    nr, nc = r_rows.shape[1], r_cols.shape[1]
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if block_t is None:
         # keep the (TB, n) g block under ~4 MiB of VMEM
         block_t = max(1, min(t, (4 << 20) // max(4 * n, 1)))
-    bn = min(block_n, n)
+    br = min(block_r, nr)
+    bc = min(block_c, nc)
     bt = min(block_t, t)
-    # pad to multiples
-    n_pad = (-n) % bn
     t_pad = (-t) % bt
-    if n_pad or t_pad:
-        # padded train points get rank >= n pointing at zero-padded g columns
-        g = jnp.pad(g, ((0, t_pad), (0, n_pad)))
-        pad_ranks = jnp.arange(n, n + n_pad, dtype=ranks.dtype)
-        ranks = jnp.pad(ranks, ((0, t_pad), (0, n_pad)))
-        if n_pad:
-            ranks = ranks.at[:, n:].set(pad_ranks[None, :])
-    tp, np_ = g.shape
-    grid = (tp // bt, np_ // bn, np_ // bn)
-    return g, ranks, bt, bn, n_pad, grid, interpret
+    r_pad = (-nr) % br
+    c_pad = (-nc) % bc
+    if t_pad:
+        g = jnp.pad(g, ((0, t_pad), (0, 0)))
+        r_rows = jnp.pad(r_rows, ((0, t_pad), (0, 0)))
+        r_cols = jnp.pad(r_cols, ((0, t_pad), (0, 0)))
+    if r_pad:
+        r_rows = jnp.pad(r_rows, ((0, 0), (0, r_pad)))
+    if c_pad:
+        r_cols = jnp.pad(r_cols, ((0, 0), (0, c_pad)))
+    g_pad = (-n) % bc
+    if g_pad:
+        g = jnp.pad(g, ((0, 0), (0, g_pad)))
+    grid = (g.shape[0] // bt, r_rows.shape[1] // br, r_cols.shape[1] // bc)
+    return g, r_rows, r_cols, bt, br, bc, r_pad, c_pad, grid, interpret
 
 
-def _io_specs(bt, bn, np_):
+def _rect_io_specs(bt, br, bc, n_g):
     return [
-        pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, ia)),  # ranks_a
-        pl.BlockSpec((bt, bn), lambda tt, ia, jb: (tt, jb)),  # ranks_b
-        pl.BlockSpec((bt, np_), lambda tt, ia, jb: (tt, 0)),  # g row block
-    ], pl.BlockSpec((bn, bn), lambda tt, ia, jb: (ia, jb))
+        pl.BlockSpec((bt, br), lambda tt, ia, jb: (tt, ia)),  # row ranks
+        pl.BlockSpec((bt, bc), lambda tt, ia, jb: (tt, jb)),  # col ranks
+        pl.BlockSpec((bt, n_g), lambda tt, ia, jb: (tt, 0)),  # g row block
+    ], pl.BlockSpec((br, bc), lambda tt, ia, jb: (ia, jb))
+
+
+def _rect_call(acc, g, r_rows, r_cols, block_r, block_c, block_t, interpret):
+    """Shared body of all four public entry points. `acc is None` runs the
+    zero-init kernel; otherwise the accumulate kernel with acc aliased to
+    the output buffer."""
+    nr, nc = r_rows.shape[1], r_cols.shape[1]
+    g, r_rows, r_cols, bt, br, bc, r_pad, c_pad, grid, interpret = (
+        _pad_rect_inputs(g, r_rows, r_cols, block_r, block_c, block_t,
+                         interpret)
+    )
+    in_specs, out_spec = _rect_io_specs(bt, br, bc, g.shape[1])
+    out_shape = jax.ShapeDtypeStruct(
+        (r_rows.shape[1], r_cols.shape[1]), jnp.float32
+    )
+    if acc is None:
+        out = pl.pallas_call(
+            _kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(r_rows, r_cols, g)
+    else:
+        if r_pad or c_pad:
+            acc = jnp.pad(acc, ((0, r_pad), (0, c_pad)))
+        out = pl.pallas_call(
+            _acc_kernel,
+            grid=grid,
+            in_specs=[out_spec] + in_specs,  # acc tiles walk the out tiling
+            out_specs=out_spec,
+            out_shape=out_shape,
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(acc, r_rows, r_cols, g)
+    return out[:nr, :nc]
 
 
 @functools.partial(
@@ -112,22 +192,11 @@ def sti_fill_pallas(
     block_t: int | None = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]  -> (n, n) f32."""
-    n = g.shape[1]
-    g, ranks, bt, bn, _, grid, interpret = _pad_inputs(
-        g, ranks, block_n, block_t, interpret
-    )
-    np_ = g.shape[1]
-    in_specs, out_spec = _io_specs(bt, bn, np_)
-    out = pl.pallas_call(
-        _kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
-        interpret=interpret,
-    )(ranks, ranks, g)
-    return out[:n, :n]
+    """out[a, b] = sum_p g[p, max(ranks[p, a], ranks[p, b])]  -> (n, n) f32.
+
+    Square form: `ranks` is both the row and the column index base."""
+    return _rect_call(None, g, ranks, ranks, block_n, block_n, block_t,
+                      interpret)
 
 
 @functools.partial(
@@ -151,21 +220,59 @@ def sti_fill_acc_pallas(
     pick block_n | n (the autotuner only proposes such shapes) to keep the
     in-place path.
     """
-    n = g.shape[1]
-    g, ranks, bt, bn, n_pad, grid, interpret = _pad_inputs(
-        g, ranks, block_n, block_t, interpret
-    )
-    np_ = g.shape[1]
-    if n_pad:
-        acc = jnp.pad(acc, ((0, n_pad), (0, n_pad)))
-    in_specs, out_spec = _io_specs(bt, bn, np_)
-    out = pl.pallas_call(
-        _acc_kernel,
-        grid=grid,
-        in_specs=[out_spec] + in_specs,  # acc tiles walk the output tiling
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
-        input_output_aliases={0: 0},
-        interpret=interpret,
-    )(acc, ranks, ranks, g)
-    return out[:n, :n]
+    return _rect_call(acc, g, ranks, ranks, block_n, block_n, block_t,
+                      interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "block_cols", "block_t", "interpret"),
+)
+def sti_fill_rect_pallas(
+    g: jnp.ndarray,
+    ranks_rows: jnp.ndarray,
+    ranks_cols: jnp.ndarray,
+    *,
+    block_rows: int = 256,
+    block_cols: int = 256,
+    block_t: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Rectangular fill:
+    out[a, b] = sum_p g[p, max(ranks_rows[p, a], ranks_cols[p, b])].
+
+    `ranks_rows` (t, n_rows) and `ranks_cols` (t, n_cols) are independent
+    index bases over the same global rank space (`g` is (t, n) with every
+    rank value < n); the result is (n_rows, n_cols) f32. The sharded
+    engine's per-device row-block update is `ranks_rows =
+    rect_row_view(ranks, d * n/D, n/D)`, `ranks_cols = ranks`.
+    """
+    return _rect_call(None, g, ranks_rows, ranks_cols, block_rows,
+                      block_cols, block_t, interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_rows", "block_cols", "block_t", "interpret"),
+)
+def sti_fill_acc_rect_pallas(
+    acc: jnp.ndarray,
+    g: jnp.ndarray,
+    ranks_rows: jnp.ndarray,
+    ranks_cols: jnp.ndarray,
+    *,
+    block_rows: int = 256,
+    block_cols: int = 256,
+    block_t: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """acc[a, b] += sum_p g[p, max(ranks_rows[p, a], ranks_cols[p, b])],
+    in place: the rectangular twin of `sti_fill_acc_pallas`.
+
+    `acc` is (n_rows, n_cols) -- the sharded engine's (n/D, n) local row
+    block -- and is ALIASED to the output buffer exactly like the square
+    accumulate kernel; pick block_rows | n_rows and block_cols | n_cols
+    (the autotuner only proposes such shapes) to keep true aliasing.
+    """
+    return _rect_call(acc, g, ranks_rows, ranks_cols, block_rows,
+                      block_cols, block_t, interpret)

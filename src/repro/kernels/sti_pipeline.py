@@ -46,9 +46,11 @@ import jax.numpy as jnp
 from repro.core.sti_knn import (
     InteractionMode,
     accumulate_fill,
+    accumulate_rect_fill,
     pairwise_sq_dists,
     ranks_from_order,
     resolve_fill,
+    resolve_rect_fill,
     superdiagonal_g,
 )
 
@@ -285,38 +287,6 @@ def fused_sti_knn_interactions(
 
 
 # ------------------------------------------------------------------ sharded
-def _block_fill_acc(acc, g, r_rows, r_all, chunk: int):
-    """acc[r, b] += sum_p g[p, max(r_rows[p, r], r_all[p, b])] for the local
-    (nl, n) row block: the rectangular, scan-carried cousin of the square
-    fills (padded test rows have g == 0, so they contribute exactly zero)."""
-    t, n = g.shape
-    nl = r_rows.shape[1]
-    chunk = max(1, min(int(chunk), t))
-    pad = (-t) % chunk
-    if pad:
-        g = jnp.pad(g, ((0, pad), (0, 0)))
-        r_rows = jnp.pad(r_rows, ((0, pad), (0, 0)))
-        r_all = jnp.pad(r_all, ((0, pad), (0, 0)))
-
-    def one(g_p, rr_p, ra_p):
-        return g_p[jnp.maximum(rr_p[:, None], ra_p[None, :])]  # (nl, n)
-
-    def body(a, io):
-        gc, rrc, rac = io
-        return a + jnp.sum(jax.vmap(one)(gc, rrc, rac), axis=0), None
-
-    acc, _ = jax.lax.scan(
-        body,
-        acc,
-        (
-            g.reshape(-1, chunk, n),
-            r_rows.reshape(-1, chunk, nl),
-            r_all.reshape(-1, chunk, n),
-        ),
-    )
-    return acc
-
-
 @functools.lru_cache(maxsize=None)
 def make_sharded_step(
     mesh,
@@ -344,14 +314,19 @@ def make_sharded_step(
       2. all-gather of the small (tb, n) g / rank tables over `axis` plus a
          reduce-scatter of the (n,) diag partial (the only per-step
          collectives — O(tb n) bytes, never O(n^2));
-      3. rectangular fill of the local row block with ALL tb test points.
+      3. rectangular fill of the local row block with ALL tb test points,
+         through the rect fill registry: `fill`/`fill_static` name a
+         rectangular variant (the Pallas accumulate kernel on TPU, the XLA
+         block scan as the universal fallback — `prepare_sharded_step`
+         resolves them).
 
     Row blocks are therefore complete sums over every test point seen: no
     psum is needed at finalize, only an all-gather of the rows. Accumulators
     are donated off-CPU, exactly like the fused step.
     """
+    from repro.kernels.sti_fill import rect_row_view
+
     dist_fn = _distance_fn(distance, distance_static)
-    chunk = int(dict(fill_static).get("chunk", 1))
     if donate is None:
         donate = jax.default_backend() != "cpu"
 
@@ -364,9 +339,10 @@ def make_sharded_step(
         u_train = jnp.take_along_axis(u, ranks, axis=-1)   # (tb/D, n)
         g_all = jax.lax.all_gather(g, axis, axis=0, tiled=True)
         r_all = jax.lax.all_gather(ranks, axis, axis=0, tiled=True)
-        rows = jax.lax.axis_index(axis) * nl + jnp.arange(nl)
-        r_rows = jnp.take(r_all, rows, axis=1)             # (tb, nl)
-        acc = _block_fill_acc(acc, g_all, r_rows, r_all, chunk)
+        # this device's (tb, nl) row window of the global rank space
+        r_rows = rect_row_view(r_all, jax.lax.axis_index(axis) * nl, nl)
+        acc = accumulate_rect_fill(acc, g_all, r_rows, r_all, fill,
+                                   fill_static)
         # the diag update reduces over the test dim, so it needs only a
         # reduce-scatter of the (n,) local partial (tiled block i lands on
         # device i = exactly this device's diag rows) -- O(n) bytes, not an
@@ -417,9 +393,15 @@ def prepare_sharded_step(
     `(step, resolved, mesh)` where `resolved` records the concrete
     implementations plus {"shards", "test_batch"} (test_batch rounded UP to
     a multiple of the shard count so every device gets an equal test slice;
-    the mask absorbs the difference). Autotune lookups run at the per-device
-    (tb/D, n) slice shape and are keyed by device count (kernels/autotune),
-    so sharded shapes tune independently of single-device ones."""
+    the mask absorbs the difference).
+
+    The local row-block update resolves against the RECTANGULAR fill
+    registry (`core.sti_knn.resolve_rect_fill`): "auto" picks the Pallas
+    accumulate kernel on TPU and the XLA block scan elsewhere (a Pallas
+    request on a build without the kernels falls back to the scan), and the
+    autotune lookup runs at the per-device (n/D, n) block shape under the
+    `rows{R}`-segmented, device-count-keyed cache key, so sharded shapes
+    tune independently of single-device ones."""
     from repro.distributed.sharding import shard_count, valuation_mesh
 
     if mesh is None:
@@ -431,23 +413,13 @@ def prepare_sharded_step(
             f"n={n} must divide evenly into {num} row shards "
             f"(per-device blocks are exactly (n/D, n))"
         )
-    if fill not in ("auto", "chunked"):
-        import warnings
-
-        warnings.warn(
-            f"the sharded engine runs a rectangular block-scan fill; "
-            f"explicit fill={fill!r} contributes only its chunk size",
-            stacklevel=2,
-        )
     tb = max(1, int(test_batch))
     tb = -(-tb // num) * num
     tbl = tb // num
-    # the sharded local fill is the rectangular block scan: only the chunk
-    # size carries over from the square-fill registry, so resolve WITHOUT
-    # tuning (a full candidate sweep would time kernels this step never
-    # runs); autotune=True still tunes the distance stage, which is used
-    fill_name, fill_static = resolve_fill(
-        fill, n, tbl, fill_params=fill_params, autotune=False
+    # the local fill sees the per-device (n/D, n) row block and ALL tb
+    # gathered test points; the distance stage runs on (tb/D, n) slices
+    fill_name, fill_static = resolve_rect_fill(
+        fill, n // num, n, tb, fill_params=fill_params, autotune=autotune
     )
     dist_name, dist_static = resolve_distance(
         distance, tbl, n, d, distance_params=distance_params, autotune=autotune
@@ -457,9 +429,10 @@ def prepare_sharded_step(
         axis=axis,
     )
     resolved = {
-        # the sharded local fill is the rectangular block scan; it borrows
-        # only the chunk size from the resolved square fill
-        "fill": f"block_chunked[{dict(fill_static).get('chunk', 1)}]",
+        # rect_ prefix: the name lives in the rectangular fill registry,
+        # not the square one (session restore re-resolves such names)
+        "fill": f"rect_{fill_name}",
+        "fill_params": dict(fill_static),
         "distance": dist_name,
         "shards": int(num),
         "test_batch": int(tb),

@@ -45,7 +45,10 @@ def main():
                     help="device count for --engine sharded (default: all "
                          "local devices, clamped to a divisor of n)")
     ap.add_argument("--fill", default="auto",
-                    help="fill registry entry (auto|chunked|onehot|xla|pallas)")
+                    help="fill registry entry (auto|chunked|onehot|xla|"
+                         "pallas); --engine sharded resolves it against "
+                         "the rectangular fill registry (Pallas row-block "
+                         "kernel on TPU, XLA block scan elsewhere)")
     ap.add_argument("--test-batch", type=int, default=256)
     ap.add_argument("--autotune", action="store_true",
                     help="time fill/block candidates for this size once and "

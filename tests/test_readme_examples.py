@@ -1,0 +1,73 @@
+"""README smoke test: the front-door docs can never rot silently.
+
+Extracts every ```python fenced block from README.md and executes it
+in-process (one shared namespace, in document order), and runs each
+`python -m repro...` command line found in ```bash blocks as a subprocess.
+If the quickstart drifts from the API, this fails on every CI run.
+"""
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+README = REPO / "README.md"
+
+_FENCE = re.compile(r"```(\w+)\n(.*?)```", re.DOTALL)
+
+
+def _blocks(lang: str) -> list[str]:
+    return [
+        body for tag, body in _FENCE.findall(README.read_text())
+        if tag == lang
+    ]
+
+
+def test_readme_exists_and_has_examples():
+    assert README.exists(), "README.md is the documentation front door"
+    assert _blocks("python"), "README must carry a runnable quickstart"
+    assert any(
+        "repro.launch.valuate" in b for b in _blocks("bash")
+    ), "README must show the CLI entry point"
+
+
+def test_readme_python_quickstart_runs():
+    """Every ```python block executes top to bottom in one namespace."""
+    ns: dict = {}
+    for i, block in enumerate(_blocks("python")):
+        try:
+            exec(compile(block, f"README.md[python #{i}]", "exec"), ns)
+        except Exception as e:  # pragma: no cover - failure path
+            pytest.fail(f"README python block #{i} failed: {e!r}\n{block}")
+    # the quickstart promises a ValuationResult with an interaction matrix
+    result = ns.get("result")
+    assert result is not None and result.interaction_matrix().shape == (
+        result.n, result.n,
+    )
+
+
+def test_readme_cli_lines_run():
+    """Each `python -m repro...` line in a ```bash block must exit 0."""
+    lines = [
+        ln.strip()
+        for block in _blocks("bash")
+        for ln in block.splitlines()
+        if "python -m repro" in ln
+    ]
+    assert lines, "README must document at least one CLI command"
+    for ln in lines:
+        # honor the documented PYTHONPATH=src prefix via the env instead
+        cmd = re.sub(r"^PYTHONPATH=\S+\s+", "", ln)
+        env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+        p = subprocess.run(
+            [sys.executable, *cmd.split()[1:]],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=600,
+        )
+        assert p.returncode == 0, (
+            f"README CLI line failed: {ln}\nstdout:\n{p.stdout}\n"
+            f"stderr:\n{p.stderr}"
+        )

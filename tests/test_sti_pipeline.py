@@ -8,10 +8,13 @@ import jax.numpy as jnp
 import repro  # noqa: F401  (package import registers the Pallas fills)
 from repro.core.sti_knn import (
     _FILL_FNS,
+    _RECT_FILL_FNS,
     accumulate_fill,
+    accumulate_rect_fill,
     ranks_from_distances,
     ranks_from_order,
     resolve_fill,
+    resolve_rect_fill,
     sti_knn_interactions,
     sti_knn_matrix_one_test,
     superdiagonal_g,
@@ -228,6 +231,129 @@ def test_accumulate_fill_matches_additive(fill, static):
     want = np.asarray(acc) + np.asarray(_FILL_FNS["xla"](g, ranks))
     got = np.asarray(accumulate_fill(acc, g, ranks, fill, static))
     np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+# ------------------------------------------------------- rectangular fills
+def _rect_window(ranks, off, count):
+    from repro.kernels.sti_fill import rect_row_view
+
+    return rect_row_view(ranks, off, count)
+
+
+def test_rect_registry_has_all_variants_at_package_import():
+    """`import repro` alone must register the rect Pallas fills (the sharded
+    engine resolves fill="pallas" against this registry)."""
+    assert {"xla", "chunked", "pallas", "pallas_interpret"} <= set(
+        _RECT_FILL_FNS
+    )
+
+
+@pytest.mark.parametrize("fill,params", [
+    ("chunked", {"chunk": 1}),
+    ("chunked", {"chunk": 3}),      # t % chunk != 0 exercises padding
+    ("pallas", {}),                 # auto-interprets off-TPU
+    # block_rows=3 does not divide row_count=row window; block_cols=10 does
+    # not divide n: both padded-block paths
+    ("pallas_interpret", {"block_rows": 3, "block_cols": 10, "block_t": 2}),
+])
+@pytest.mark.parametrize("t,n,off,rows", [
+    (5, 37, 8, 16),    # interior window, ragged n
+    (4, 64, 56, 8),    # trailing window (off + rows == n)
+    (3, 24, 0, 24),    # full-width window: rect == square
+])
+def test_rect_fill_variants_match_xla_reference(fill, params, t, n, off, rows):
+    """Every rect fill equals the dense (t, rows, n)-materializing oracle on
+    a row window of the global rank space, including non-divisible
+    block_rows/row_count and ragged t."""
+    rng = np.random.default_rng(t * 1000 + n + off)
+    g, ranks = _rand_fill_inputs(rng, t, n)
+    r_rows = _rect_window(ranks, off, rows)
+    want = np.asarray(_RECT_FILL_FNS["xla"](g, r_rows, ranks))
+    got = np.asarray(_RECT_FILL_FNS[fill](g, r_rows, ranks, **params))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # and the row window of the square fill is the rect fill
+    square = np.asarray(_FILL_FNS["xla"](g, ranks))
+    np.testing.assert_allclose(want, square[off:off + rows], atol=1e-5)
+
+
+@pytest.mark.parametrize("fill,static", [
+    ("chunked", (("chunk", 2),)),
+    ("xla", ()),
+    ("pallas", ()),
+    ("pallas_interpret", (("block_rows", 8), ("block_cols", 16))),
+])
+def test_accumulate_rect_fill_matches_additive(fill, static):
+    """Every in-place rect accumulate form equals acc + rect_fill(...) --
+    the aliased Pallas variant included."""
+    rng = np.random.default_rng(31)
+    g, ranks = _rand_fill_inputs(rng, 5, 37)
+    r_rows = _rect_window(ranks, 5, 24)
+    acc = jnp.asarray(rng.normal(size=(24, 37)).astype(np.float32))
+    want = np.asarray(acc) + np.asarray(
+        _RECT_FILL_FNS["xla"](g, r_rows, ranks)
+    )
+    got = np.asarray(accumulate_rect_fill(acc, g, r_rows, ranks, fill, static))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_resolve_rect_fill_contract():
+    # unknown names raise; pallas falls back to the XLA scan if unregistered
+    with pytest.raises(ValueError, match="unknown rect fill"):
+        resolve_rect_fill("nope", 8, 64, 4)
+    name, static = resolve_rect_fill("chunked", 8, 64, 4,
+                                     fill_params={"chunk": 2})
+    assert name == "chunked" and dict(static) == {"chunk": 2}
+    with pytest.raises(ValueError, match="does not accept"):
+        resolve_rect_fill("chunked", 8, 64, 4, fill_params={"block_rows": 8})
+    # the heuristic default off-TPU is the XLA block scan
+    name, _ = resolve_rect_fill("auto", 8, 64, 4)
+    assert name in _RECT_FILL_FNS
+
+
+def test_resolve_rect_fill_square_name_falls_back_with_warning():
+    """A square-registry fill with no rect twin (e.g. "onehot" restored
+    from a single-device checkpoint) must keep the sharded engine running
+    on the XLA block scan, not raise."""
+    with pytest.warns(UserWarning, match="no rectangular variant"):
+        name, static = resolve_rect_fill("onehot", 8, 64, 4,
+                                         fill_params={"chunk": 2})
+    assert name == "chunked" and dict(static) == {"chunk": 2}
+
+
+def test_rect_fill_candidates_preserve_aliasing():
+    """TPU block candidates must keep the in-place path: every proposed
+    block either divides its extent or clamps to it (rows=192 must NOT get
+    block_rows=128, which would pad-copy the donated accumulator on every
+    step)."""
+    from repro.kernels.autotune import rect_fill_candidates
+
+    for rows, n in ((192, 1536), (256, 2048), (96, 768)):
+        for name, params in rect_fill_candidates(rows, n, 64, "tpu"):
+            if name != "pallas":
+                continue
+            br, bc = params["block_rows"], params["block_cols"]
+            assert rows % min(br, rows) == 0, (rows, params)
+            assert n % min(bc, n) == 0, (n, params)
+    # rows=192: 128 rejected (192 % 128 != 0), 256 clamps to 192 -> kept
+    pal = [p for f, p in rect_fill_candidates(192, 1536, 64, "tpu")
+           if f == "pallas"]
+    assert pal and all(p["block_rows"] != 128 for p in pal)
+
+
+def test_rect_autotune_key_carries_rows_segment(tmp_path):
+    """Rect winners persist under rows{R}-segmented keys: an (8, 64) block
+    must not share an entry with a (32, 64) block at the same n/t bucket."""
+    from repro.kernels import autotune as at
+
+    cache = str(tmp_path / "rect.json")
+    name, params = at.autotune_rect_fill(8, 64, 6, path=cache)
+    assert name in _RECT_FILL_FNS
+    data = at._load(cache)
+    (key,) = data
+    assert key.startswith("rectfill:") and ":rows8:" in key
+    assert at.lookup_rect_fill(8, 64, 6, path=cache) == (name, params)
+    assert at.lookup_rect_fill(32, 64, 6, path=cache) is None
+    assert at.best_rect_fill(8, 64, 6, path=cache) == (name, params)
 
 
 # ---------------------------------------------------------------- autotuner
