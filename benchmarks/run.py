@@ -133,6 +133,48 @@ def bench_baselines():
     return rows
 
 
+# --------------------------------------------------- point-value methods:
+# the method-generic streaming engine (ISSUE 5): the exact streamed wknn
+# vs its O(2^n) oracle, and streamed-session vs eager rows per point method
+def bench_point_methods():
+    from repro.core import get_method, wknn_shapley_values
+    from repro.core.sti_baseline import brute_force_wknn_shapley
+
+    rows = []
+    # headline: exact weighted-KNN Shapley without subset enumeration.
+    # n=12 is the largest size the 2^n oracle finishes in seconds.
+    x, y, xt, yt = _problem(12, 4, d=4, seed=5)
+    t0 = time.perf_counter()
+    want = brute_force_wknn_shapley(
+        np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), 5)
+    us_oracle = (time.perf_counter() - t0) * 1e6
+    us_exact = _time(lambda: wknn_shapley_values(x, y, xt, yt, 5))
+    err = float(np.abs(np.asarray(
+        wknn_shapley_values(x, y, xt, yt, 5)) - want).max())
+    rows.append((
+        "wknn_exact_vs_oracle_n12", us_exact,
+        f"oracle_us={us_oracle:.0f};speedup={us_oracle / us_exact:.0f}x;"
+        f"max_err={err:.1e}",
+        {"method": "wknn", "engine": "streamed"},
+    ))
+    # streamed (session-driven) vs eager (direct call of the same generic
+    # step) at production size -- tracks session scaffolding overhead
+    x, y, xt, yt = _problem(2048, 256)
+    for name in ("knn_shapley", "wknn", "loo"):
+        m = get_method(name)
+        us_st = _time(lambda: m(x, y, xt, yt, k=5, engine="streamed",
+                                distance="xla").point_values)
+        us_ea = _time(lambda: m(x, y, xt, yt, k=5,
+                                engine="eager").point_values)
+        rows.append((
+            f"{name}_streamed_n2048_t256", us_st,
+            f"eager_us={us_ea:.0f};session_overhead="
+            f"{(us_st - us_ea) / max(us_ea, 1e-9) * 100:+.0f}%",
+            {"method": name, "engine": "streamed"},
+        ))
+    return rows
+
+
 # ----------------------------------------------------- paper Appendix B:
 # k-invariance of the interaction matrix (Pearson > 0.99)
 def bench_k_invariance():
@@ -359,6 +401,7 @@ BENCHES = {
     "speedup": bench_speedup_vs_bruteforce,
     "complexity": bench_complexity_scaling,
     "baselines": bench_baselines,
+    "point_methods": bench_point_methods,
     "k_invariance": bench_k_invariance,
     "mislabel": bench_mislabel_detection,
     "structure": bench_interaction_structure,
@@ -388,6 +431,7 @@ def main() -> None:
         "speedup": {"method": "sti", "engine": "scan"},
         "complexity": {"method": "sti", "engine": "scan"},
         "baselines": {"method": None, "engine": None},
+        "point_methods": {"method": None, "engine": None},
         "k_invariance": {"method": "sti", "engine": "scan"},
         "mislabel": {"method": "sti", "engine": "scan"},
         "structure": {"method": "sti", "engine": "scan"},

@@ -14,10 +14,12 @@ from repro.core.wknn import wknn_shapley_values
 from repro.core import analysis
 from repro.core.results import ValuationResult
 from repro.core.methods import (
+    ENGINES,
     ValuationMethod,
     register_method,
     get_method,
     list_methods,
+    valid_engines,
 )
 from repro.core.session import ShardedValuationSession, ValuationSession
 
@@ -36,6 +38,8 @@ __all__ = [
     "analysis",
     "ValuationResult",
     "ValuationMethod",
+    "ENGINES",
+    "valid_engines",
     "register_method",
     "get_method",
     "list_methods",

@@ -7,24 +7,30 @@ Recurrence, per test point, with train points sorted closest-first
   s_{alpha_n} = m(n) / n * min(k, n) / k
   s_{alpha_i} = s_{alpha_{i+1}} + (m(i) - m(i+1)) / k * min(k, i) / i
 
-As with STI-KNN we vectorize the recurrence as a reverse cumulative sum.
+As with STI-KNN we vectorize the recurrence as a reverse cumulative sum
+(`knn_shapley_from_sorted`). The streaming/batching scaffolding is NOT
+duplicated here: `knn_shapley_values` is a thin wrapper over the
+method-generic pipeline (`repro.kernels.sti_pipeline.stream_point_values`,
+update kernel "knn_shapley" in `repro.kernels.stream_kernels`), the same
+distance -> rank -> update step the interaction engines run.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-
-from repro.core.sti_knn import pairwise_sq_dists
 
 __all__ = ["knn_shapley_values", "knn_shapley_from_sorted"]
 
 
 def knn_shapley_from_sorted(match_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     """(..., n) bool/float label-match in sorted order -> (..., n) Shapley
-    values in SORTED coordinates."""
+    values in SORTED coordinates.
+
+    Linear in `match_sorted` (the recurrence proof only uses linearity of
+    the utility in the per-point values), which is what lets the streaming
+    engine fold a validity mask in and reuse this closed form for the
+    weighted contribution vector of `repro.core.wknn`.
+    """
     m = match_sorted.astype(jnp.float32)
     n = m.shape[-1]
     i1 = jnp.arange(1, n + 1, dtype=jnp.float32)  # 1-based position
@@ -38,36 +44,21 @@ def knn_shapley_from_sorted(match_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     return jnp.concatenate([last + suffix, last], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "test_batch"))
 def knn_shapley_values(
-    x_train, y_train, x_test, y_test, k: int, *, test_batch: int = 512
+    x_train, y_train, x_test, y_test, k: int, *, test_batch: int = 512,
+    distance: str = "xla", autotune: bool = False
 ) -> jnp.ndarray:
-    """(n,) Shapley values of the KNN utility, averaged over the test set."""
-    n = x_train.shape[0]
-    t = x_test.shape[0]
-    if t < 1:
-        raise ValueError("need at least one test point")
+    """(n,) Shapley values of the KNN utility, averaged over the test set.
 
-    def body(acc, batch):
-        xb, yb = batch
-        d2 = pairwise_sq_dists(xb, x_train)
-        order = jnp.argsort(d2, axis=-1, stable=True)
-        match = y_train[order] == yb[:, None]
-        s_sorted = knn_shapley_from_sorted(match, k)
-        # scatter back to original train ids
-        s = jnp.zeros((xb.shape[0], n), jnp.float32).at[
-            jnp.arange(xb.shape[0])[:, None], order
-        ].set(s_sorted)
-        return acc + jnp.sum(s, axis=0), None
+    Thin wrapper over the method-generic streaming pipeline (the eager
+    engine of method "knn_shapley"); `ValuationSession(mode="knn_shapley")`
+    streams the identical step incrementally. `distance` picks the distance
+    kernel ("xla" default for determinism; "auto" consults the autotune
+    cache, which `autotune=True` populates).
+    """
+    from repro.kernels.sti_pipeline import stream_point_values
 
-    tb = min(test_batch, t)
-    num = t // tb
-    acc = jnp.zeros((n,), jnp.float32)
-    if num:
-        xr = x_test[: num * tb].reshape(num, tb, -1)
-        yr = y_test[: num * tb].reshape(num, tb)
-        acc, _ = jax.lax.scan(body, acc, (xr, yr))
-    rem = t - num * tb
-    if rem:
-        acc, _ = body(acc, (x_test[num * tb :], y_test[num * tb :]))
-    return acc / t
+    return stream_point_values(
+        "knn_shapley", x_train, y_train, x_test, y_test, int(k),
+        test_batch=test_batch, distance=distance, autotune=autotune,
+    )

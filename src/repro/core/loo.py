@@ -3,35 +3,33 @@
 LOO_i = v(N) - v(N \\ {i}). For KNN, removing train point i changes the
 prediction for a test point only if rank(i) < k: the (k+1)-th neighbour
 slides into the window, so the delta is (m(i) - m(k+1-th)) / k.
+
+`loo_values` is a thin wrapper over the method-generic streaming pipeline
+(update kernel "loo" in `repro.kernels.stream_kernels`): the same
+distance -> rank -> update step as every other method, so LOO streams,
+checkpoints, and shards for free instead of owning a hand-rolled batch
+body.
 """
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-
-from repro.core.sti_knn import pairwise_sq_dists
 
 __all__ = ["loo_values"]
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def loo_values(x_train, y_train, x_test, y_test, k: int) -> jnp.ndarray:
-    n = x_train.shape[0]
-    d2 = pairwise_sq_dists(x_test, x_train)
-    order = jnp.argsort(d2, axis=-1, stable=True)
-    t = x_test.shape[0]
-    ranks = jnp.zeros_like(order).at[
-        jnp.arange(t)[:, None], order
-    ].set(jnp.broadcast_to(jnp.arange(n), order.shape))
-    match = (y_train[None, :] == y_test[:, None]).astype(jnp.float32)
-    if n > k:
-        # label-match of the (k+1)-th neighbour (0-based sorted position k)
-        next_match = match[jnp.arange(t), order[:, k]][:, None]
-    else:
-        next_match = jnp.zeros((t, 1), jnp.float32)
-    in_window = (ranks < k).astype(jnp.float32)
-    delta = in_window * (match - next_match) / k
-    return jnp.mean(delta, axis=0)
+def loo_values(
+    x_train, y_train, x_test, y_test, k: int, *, test_batch: int = 512,
+    distance: str = "xla", autotune: bool = False
+) -> jnp.ndarray:
+    """(n,) leave-one-out values of the KNN utility, averaged over the test
+    set (the eager engine of method "loo"; `ValuationSession(mode="loo")`
+    streams the identical step incrementally). `distance` picks the
+    distance kernel ("xla" default; "auto" consults the autotune cache,
+    which `autotune=True` populates)."""
+    from repro.kernels.sti_pipeline import stream_point_values
+
+    return stream_point_values(
+        "loo", x_train, y_train, x_test, y_test, int(k),
+        test_batch=test_batch, distance=distance, autotune=autotune,
+    )

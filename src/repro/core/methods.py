@@ -8,31 +8,43 @@ protocol --
     result = method(x_train, y_train, x_test, y_test, k=5, engine="fused")
     result.values(); result.mislabel_scores(y_train, 2); result.save(path)
 
--- so engines (fused, scan, distributed), launchers, benchmarks, and the
+-- so engines (fused, scan, sharded, ...), launchers, benchmarks, and the
 serving layer dispatch by name instead of hand-rolled branches. Registered
 methods (all return `ValuationResult`):
 
   "sti"          paper's Shapley-Taylor pair interactions, O(t n^2)
   "sii"          Grabisch-Roubens interaction index, same engines
   "knn_shapley"  exact per-point KNN-Shapley (Jia et al.), O(t n log n)
-  "wknn"         weighted soft-label KNN-Shapley (arXiv 2401.11103 family)
+  "wknn"         exact weighted soft-label KNN-Shapley (arXiv 2401.11103
+                 family), O(t n^2) streamed -- no 2^n on the default path
   "loo"          leave-one-out values
 
-Interaction methods accept `engine=` ("fused" | "scan" | "distributed" |
-"sharded"): fused streams donated-accumulator steps through the
-distance->rank->g->fill pipeline, scan is the single-jit lax.scan path,
-distributed runs the shard_map production cell over a device mesh (routed
-through repro.compat so it works on jax 0.4.x too), and sharded is the
-multi-device fused pipeline (test stream + accumulator row blocks sharded
-over a 1-D mesh, n^2/D accumulator memory per device; DESIGN.md Sec. 10).
+The `ENGINES` table maps every method to its supported engines (first
+entry = default):
+
+  interaction methods ("sti"/"sii"):
+    fused        streaming distance->rank->g->fill pipeline, donated accs
+    scan         single-jit lax.scan path
+    distributed  shard_map production cell over a device mesh
+    sharded      multi-device fused pipeline, (n/D, n) row-block accs
+  point-value methods ("knn_shapley"/"wknn"/"loo"):
+    streamed     the method-generic streaming pipeline via ValuationSession
+                 (DEFAULT: sessions, checkpoints, padded ragged batches)
+    eager        direct one-shot call of the public function (same step,
+                 no session scaffolding)
+    sharded      multi-device vector pipeline ((n/D,) state per device)
+    oracle       O(2^n) brute-force subset enumeration -- parity tests
+                 only, guarded to n <= 16 ("knn_shapley"/"wknn")
 """
 
 from __future__ import annotations
 
 import inspect
 import time
+import warnings
 from typing import Callable, Optional, Protocol, runtime_checkable
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -43,10 +55,44 @@ __all__ = [
     "register_method",
     "get_method",
     "list_methods",
-    "INTERACTION_ENGINES",
+    "ENGINES",
+    "valid_engines",
+    "INTERACTION_ENGINES",  # deprecated alias for ENGINES["sti"]
 ]
 
-INTERACTION_ENGINES = ("fused", "scan", "distributed", "sharded")
+# method -> supported engines, first entry is the default. Methods added
+# via register_method may extend this table (or stay engine-less).
+ENGINES: dict[str, tuple[str, ...]] = {
+    "sti": ("fused", "scan", "distributed", "sharded"),
+    "sii": ("fused", "scan", "distributed", "sharded"),
+    "knn_shapley": ("streamed", "eager", "sharded", "oracle"),
+    "wknn": ("streamed", "eager", "sharded", "oracle"),
+    "loo": ("streamed", "eager", "sharded"),
+}
+
+# engine="oracle" enumerates 2^n subsets: hard-capped so a stray call on a
+# real training set cannot wedge the process for hours
+_ORACLE_MAX_N = 16
+
+
+def valid_engines(name: str) -> Optional[tuple[str, ...]]:
+    """Supported engines for method `name` (first = default), or None when
+    the method is not in the ENGINES table (custom registrations)."""
+    return ENGINES.get(name)
+
+
+def __getattr__(name: str):
+    """Module-level deprecation shim: `INTERACTION_ENGINES` predates the
+    method-aware ENGINES table and now aliases ENGINES["sti"]."""
+    if name == "INTERACTION_ENGINES":
+        warnings.warn(
+            "INTERACTION_ENGINES is deprecated; use "
+            "repro.core.methods.ENGINES[method] (or valid_engines(method))",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return ENGINES["sti"]
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @runtime_checkable
@@ -72,11 +118,13 @@ def register_method(name: str, method: ValuationMethod) -> None:
 def get_method(name: str) -> ValuationMethod:
     """Resolve a registered valuation method by name ("sti", "sii",
     "knn_shapley", "wknn", "loo", or anything added via `register_method`);
-    raises ValueError naming the registered methods on a miss."""
+    raises ValueError naming the registered methods AND the valid engines
+    per method on a miss."""
     if name not in _METHODS:
         raise ValueError(
             f"unknown valuation method {name!r}; registered: "
-            f"{sorted(_METHODS)}"
+            f"{sorted(_METHODS)} (engines per method: "
+            f"{ {m: ENGINES[m] for m in sorted(_METHODS) if m in ENGINES} })"
         )
     return _METHODS[name]
 
@@ -84,6 +132,13 @@ def get_method(name: str) -> ValuationMethod:
 def list_methods() -> list[str]:
     """Sorted names of every registered valuation method."""
     return sorted(_METHODS)
+
+
+def _engine_error(method: str, engine: str) -> ValueError:
+    return ValueError(
+        f"unknown engine {engine!r} for method {method!r}; valid engines: "
+        f"{ENGINES.get(method, ())}"
+    )
 
 
 def _base_meta(x_train, x_test, k: int) -> dict:
@@ -128,10 +183,8 @@ class _InteractionMethod:
                  distance_params: Optional[dict] = None,
                  autotune: bool = False, mesh=None,
                  shards: Optional[int] = None) -> ValuationResult:
-        if engine not in INTERACTION_ENGINES:
-            raise ValueError(
-                f"unknown engine {engine!r}; choose from {INTERACTION_ENGINES}"
-            )
+        if engine not in ENGINES[self.name]:
+            raise _engine_error(self.name, engine)
         if shards is not None and engine != "sharded":
             # silently running single-device would defeat the n^2/D memory
             # split the caller asked for
@@ -140,7 +193,8 @@ class _InteractionMethod:
                 f"(got engine={engine!r})"
             )
         meta = _base_meta(x_train, x_test, k)
-        meta.update(method=self.name, mode=self.mode, engine=engine)
+        meta.update(method=self.name, mode=self.mode, engine=engine,
+                    streamed=engine in ("fused", "sharded"))
         # provenance must name the RESOLVED implementations, not "auto":
         # resolve after the run (an autotune=True run populates the cache
         # first, so this lookup sees the same winner the run used)
@@ -193,6 +247,7 @@ class _InteractionMethod:
             meta.update(mesh=mesh_shape)
         phi = jax.block_until_ready(phi)
         meta["elapsed_s"] = round(time.perf_counter() - t0, 4)
+        meta["resolved_fill"] = meta.get("fill")
         return ValuationResult(method=self.name, phi=phi, meta=meta)
 
 
@@ -223,49 +278,144 @@ def _distributed_interactions(x_train, y_train, x_test, y_test, k, mode,
 
 
 class _PointValueMethod:
-    """Per-point value methods ("knn_shapley", "loo", "wknn")."""
+    """Per-point value methods ("knn_shapley", "loo", "wknn"): engine-aware
+    dispatch over the method-generic streaming pipeline.
 
-    def __init__(self, name: str, fn: Callable, **static_opts):
+    Engines (ENGINES[name], first = default): "streamed" drives a
+    `ValuationSession(mode=name)` over the test set, "eager" calls the
+    public function directly (same generic step, no session scaffolding),
+    "sharded" drives a `ShardedValuationSession` ((n/D,) vector state per
+    device), "oracle" runs the registered O(2^n) brute force (parity tests
+    only; guarded to n <= 16).
+    """
+
+    def __init__(self, name: str, fn: Callable,
+                 oracle: Optional[Callable] = None, **static_opts):
         self.name = name
         self._fn = fn
+        self._oracle = oracle
         self._static = static_opts
-        self.accepted_options = _keyword_options(fn)
+        self._eager_kw = _keyword_options(fn)
+        self.accepted_options = self._eager_kw | {
+            "engine", "test_batch", "distance", "autotune", "shards",
+        }
 
     def __call__(self, x_train, y_train, x_test, y_test, *, k: int = 5,
-                 **opts) -> ValuationResult:
+                 engine: Optional[str] = None, **opts) -> ValuationResult:
         bad = set(opts) - self.accepted_options
         if bad:
             raise ValueError(
                 f"method {self.name!r} does not accept options "
                 f"{sorted(bad)}; accepted: {sorted(self.accepted_options)}"
             )
+        engines = ENGINES.get(self.name, ("eager",))
+        engine = engine or engines[0]
+        if engine not in engines:
+            raise _engine_error(self.name, engine)
+        shards = opts.pop("shards", None)
+        if shards is not None and engine != "sharded":
+            raise ValueError(
+                f"shards= is only meaningful with engine='sharded' "
+                f"(got engine={engine!r})"
+            )
+        # execution options the caller passed EXPLICITLY: forwarded to the
+        # engine that runs, rejected (never silently dropped) by one that
+        # cannot honor them -- same contract as shards= above
+        explicit = {nm: opts.pop(nm) for nm in
+                    ("test_batch", "distance", "autotune") if nm in opts}
+        test_batch = int(explicit.get("test_batch", 512))
+        kw = dict(self._static, **opts)   # method statics, e.g. weights
         meta = _base_meta(x_train, x_test, k)
-        kw = dict(self._static, **opts)
-        meta.update(method=self.name, **{k_: v for k_, v in kw.items()
-                                         if isinstance(v, (str, int, float))})
-        t0 = time.perf_counter()
-        values = jax.block_until_ready(
-            self._fn(x_train, y_train, x_test, y_test, k, **kw)
+        meta.update(
+            method=self.name, engine=engine,
+            streamed=engine in ("streamed", "sharded"), resolved_fill=None,
+            **{k_: v for k_, v in {**kw, **explicit}.items()
+               if isinstance(v, (str, int, float))},
         )
+        t0 = time.perf_counter()
+        if engine == "oracle":
+            if explicit:
+                raise ValueError(
+                    f"options {sorted(explicit)} do not apply to "
+                    f"engine='oracle' (brute-force subset enumeration)"
+                )
+            values = self._run_oracle(x_train, y_train, x_test, y_test, k, kw)
+        elif engine == "eager":
+            unsupported = set(explicit) - self._eager_kw
+            if unsupported:
+                raise ValueError(
+                    f"options {sorted(unsupported)} are not supported by "
+                    f"engine='eager' for method {self.name!r}"
+                )
+            values = self._fn(x_train, y_train, x_test, y_test, k,
+                              **dict(kw, **explicit))
+        else:  # streamed | sharded
+            from repro.core.session import (
+                ShardedValuationSession, ValuationSession)
+
+            t = int(x_test.shape[0])
+            # distance defaults to "xla" on EVERY point engine (matching
+            # the eager wrappers): the same call must not resolve different
+            # distance kernels per engine or per autotune-cache state --
+            # pass distance="auto" explicitly to opt into the cache
+            skw = dict(k=k, mode=self.name,
+                       test_batch=max(1, min(test_batch, max(t, 1))),
+                       distance=explicit.get("distance", "xla"),
+                       autotune=bool(explicit.get("autotune", False)),
+                       method_opts=kw or None)
+            if engine == "sharded":
+                sess = ShardedValuationSession(
+                    x_train, y_train, shards=shards, **skw)
+            else:
+                sess = ValuationSession(x_train, y_train, **skw)
+            values = sess.update(x_test, y_test).finalize().point_values
+            meta.update({nm: v for nm, v in sess._resolved.items()
+                         if nm in ("distance", "shards", "test_batch")})
+        values = jax.block_until_ready(jnp.asarray(values))
         meta["elapsed_s"] = round(time.perf_counter() - t0, 4)
         return ValuationResult(
             method=self.name, point_values=values, meta=meta
         )
 
+    def _run_oracle(self, x_train, y_train, x_test, y_test, k, kw):
+        """The registered O(2^n) brute force on host numpy arrays, capped at
+        n <= 16 so a misdirected call cannot enumerate 2^1000 subsets."""
+        if self._oracle is None:
+            raise _engine_error(self.name, "oracle")
+        n = int(x_train.shape[0])
+        if n > _ORACLE_MAX_N:
+            raise ValueError(
+                f"engine='oracle' enumerates 2^n subsets and is for parity "
+                f"tests only: n={n} > {_ORACLE_MAX_N}; use the default "
+                f"engine (exact, no subset enumeration)"
+            )
+        okw = {nm: v for nm, v in kw.items()
+               if nm in _keyword_options(self._oracle)}
+        return jnp.asarray(self._oracle(
+            np.asarray(x_train), np.asarray(y_train),
+            np.asarray(x_test), np.asarray(y_test), int(k), **okw,
+        ))
+
 
 def _register_builtins() -> None:
     from repro.core.knn_shapley import knn_shapley_values
     from repro.core.loo import loo_values
+    from repro.core.sti_baseline import (
+        brute_force_shapley, brute_force_wknn_shapley)
     from repro.core.wknn import wknn_shapley_values
 
     register_method("sti", _InteractionMethod("sti", mode="sti"))
     register_method("sii", _InteractionMethod("sii", mode="sii"))
     register_method(
-        "knn_shapley", _PointValueMethod("knn_shapley", knn_shapley_values)
+        "knn_shapley",
+        _PointValueMethod("knn_shapley", knn_shapley_values,
+                          oracle=brute_force_shapley),
     )
     register_method("loo", _PointValueMethod("loo", loo_values))
     register_method(
-        "wknn", _PointValueMethod("wknn", wknn_shapley_values)
+        "wknn",
+        _PointValueMethod("wknn", wknn_shapley_values,
+                          oracle=brute_force_wknn_shapley),
     )
 
 

@@ -122,7 +122,13 @@ class ValuationResult:
         return analysis.summarize_keep_order(self.values())
 
     def summary(self) -> dict:
-        """Compact JSON-able digest: provenance + value statistics."""
+        """Compact JSON-able digest: provenance + value statistics.
+
+        The execution-provenance keys are UNIFORM across methods: every
+        summary carries `engine`, `resolved_fill`, and `streamed` (None /
+        False when the producing method did not set them), so downstream
+        tooling never needs per-method key probing.
+        """
         v = np.asarray(self.values())
         out = {
             "method": self.method,
@@ -138,6 +144,9 @@ class ValuationResult:
             out["interaction_off_diag_mean"] = float(off.mean())
             out["main_term_mean"] = float(np.diag(p).mean())
         out.update(_jsonable(self.meta))
+        out.setdefault("engine", None)
+        out.setdefault("resolved_fill", out.get("fill"))
+        out.setdefault("streamed", False)
         return out
 
     # ----------------------------------------------------------- persistence

@@ -1,33 +1,41 @@
 """`ValuationSession`: constant-memory streaming valuation over unbounded t.
 
-The fused pipeline's donated-accumulator step makes the STI-KNN computation
-a pure fold over test batches: (acc, diag) <- step(acc, diag, xb, yb, mask,
-...). A session owns that fold so test points can arrive incrementally
-(online valuation, a test set that does not fit in memory, or a service
-endpoint):
+The method-generic pipeline's donated-accumulator step makes EVERY
+registered valuation method a pure fold over test batches:
+state <- step(state, xb, yb, mask, ...). A session owns that fold so test
+points can arrive incrementally (online valuation, a test set that does not
+fit in memory, or a service endpoint):
 
-    sess = ValuationSession(x_train, y_train, k=5)
+    sess = ValuationSession(x_train, y_train, k=5)            # mode="sti"
+    sess = ValuationSession(x_train, y_train, mode="knn_shapley")
     for xb, yb in test_stream:
         sess.update(xb, yb)
-    result = sess.finalize()          # ValuationResult, phi averaged over t
+    result = sess.finalize()          # ValuationResult, averaged over t
+
+`mode` is any method with a registered streaming kernel
+(`repro.kernels.stream_kernels`): "sti"/"sii" fold an (n, n) accumulator +
+(n,) diagonal; "knn_shapley"/"wknn"/"loo" fold a single (n,) vector --
+the state layout lives in the method's `AccumulatorSpec`, so the session
+code is one fold for all of them. `method_opts` carries method statics
+(e.g. {"weights": "inverse"} for wknn).
 
 Every batch is padded to the compiled `test_batch` shape with a validity
 mask (`pad_test_batch`), so ONE executable serves full and ragged batches
-alike. Peak device memory is O(n^2 + test_batch * n) regardless of how many
-updates arrive. `finalize()` is a snapshot -- the session keeps accepting
-updates afterwards. `checkpoint()` / `ValuationSession.restore()` persist
-the partial sums (npz) so a long-running valuation survives preemption:
-the accumulators are plain sums, so a restored session continues exactly
-where the saved one stopped.
+alike. Peak device memory is O(state + test_batch * n) regardless of how
+many updates arrive. `finalize()` is a snapshot -- the session keeps
+accepting updates afterwards. `checkpoint()` / `ValuationSession.restore()`
+persist the partial sums (npz) so a long-running valuation survives
+preemption: the accumulators are plain sums, so a restored session
+continues exactly where the saved one stopped.
 
-`ShardedValuationSession` is the multi-device form (DESIGN.md Sec. 10): the
-test stream is row-sharded over a 1-D device mesh and the (n, n) accumulator
-is sharded by ROW BLOCKS -- each device holds an (n/D, n) partial, peak
-accumulator memory n^2/D per device -- with the row blocks all-gathered only
-at `finalize()`. Checkpoints are written as the dense host arrays, so a
-stream checkpointed under D devices restores under any device count
-(including 1: the session silently falls back to the single-device fused
-step when only one shard is usable).
+`ShardedValuationSession` is the multi-device form (DESIGN.md Sec. 10/12):
+the test stream is row-sharded over a 1-D device mesh and the state is
+sharded per its spec layout -- (n/D, n) row blocks for the interaction
+matrix, (n/D,) row shards for vectors -- gathered only at `finalize()`.
+Checkpoints are written as the dense host arrays, so a stream checkpointed
+under D devices restores under any device count (including 1: the session
+silently falls back to the single-device step when only one shard is
+usable).
 """
 
 from __future__ import annotations
@@ -44,11 +52,10 @@ from repro.core.results import ValuationResult
 
 __all__ = ["ValuationSession", "ShardedValuationSession"]
 
-_MODES = ("sti", "sii")
-
 
 class ValuationSession:
-    """Streaming STI/SII valuation against a fixed training set."""
+    """Streaming valuation of any registered method against a fixed
+    training set (see module docstring)."""
 
     _ENGINE = "session"
 
@@ -57,9 +64,14 @@ class ValuationSession:
                  fill_params: Optional[dict] = None, distance: str = "auto",
                  distance_params: Optional[dict] = None,
                  autotune: bool = False,
+                 method_opts: Optional[dict] = None,
                  embed_fn: Optional[Callable] = None):
-        if mode not in _MODES:
-            raise ValueError(f"unknown mode {mode!r}; choose from {_MODES}")
+        from repro.kernels.stream_kernels import stream_methods
+
+        if mode not in stream_methods():
+            raise ValueError(
+                f"unknown mode {mode!r}; choose from {stream_methods()}"
+            )
         if k < 1:
             raise ValueError("k must be >= 1")
         self._embed = embed_fn or (lambda x: x)
@@ -70,21 +82,34 @@ class ValuationSession:
         self.k = int(k)
         self.mode = mode
         self.test_batch = max(1, int(test_batch))
+        self.method_opts = dict(method_opts or {})
         self._t = 0
         # hook: subclasses build their own step/accumulators (sharded)
         self._build(fill, fill_params, distance, distance_params, autotune)
 
     def _build(self, fill, fill_params, distance, distance_params, autotune):
-        from repro.kernels.sti_pipeline import prepare_fused_step
+        from repro.kernels.sti_pipeline import prepare_stream_step
 
         n, d = self.x_train.shape
-        self._step, self._resolved = prepare_fused_step(
-            n, d, self.k, mode=self.mode, test_batch=self.test_batch,
+        self._step, self._resolved, self._spec = prepare_stream_step(
+            self.mode, n, d, self.k, test_batch=self.test_batch,
             fill=fill, fill_params=fill_params, distance=distance,
             distance_params=distance_params, autotune=autotune,
+            method_opts=self.method_opts,
         )
-        self._acc = jnp.zeros((n, n), jnp.float32)
-        self._diag = jnp.zeros((n,), jnp.float32)
+        self._state = self._spec.init(n)
+
+    # ------------------------------------------------------ legacy accessors
+    @property
+    def _acc(self):
+        """First state array (the (n, n) accumulator for interaction modes;
+        kept for callers/tests that predate the generic state tuple)."""
+        return self._state[0]
+
+    @property
+    def _diag(self):
+        """Interaction modes' (n,) diagonal accumulator (legacy accessor)."""
+        return self._state[1]
 
     # -------------------------------------------------------------- updates
     @property
@@ -93,7 +118,7 @@ class ValuationSession:
         return self._t
 
     def update(self, x_test_batch, y_test_batch) -> "ValuationSession":
-        """Fold one batch of test points into the accumulators.
+        """Fold one batch of test points into the accumulator state.
 
         Batches of any size: the batch is consumed in `test_batch` slices,
         each padded to the compiled shape with a zero validity mask, so the
@@ -117,8 +142,8 @@ class ValuationSession:
         for start in range(0, b, self.test_batch):
             sl = slice(start, min(start + self.test_batch, b))
             xs, ys, mask = pad_test_batch(xb[sl], yb[sl], self.test_batch)
-            self._acc, self._diag = self._step(
-                self._acc, self._diag, *self._place_batch(xs, ys, mask),
+            self._state = self._step(
+                self._state, *self._place_batch(xs, ys, mask),
                 self.x_train, self.y_train,
             )
         self._t += b
@@ -129,31 +154,33 @@ class ValuationSession:
         return xs, ys, mask
 
     # ------------------------------------------------------------- results
-    def _gathered_state(self):
-        """Hook: (acc, diag) as whole arrays (sharded sessions all-gather)."""
-        return self._acc, self._diag
+    def _gathered_state(self) -> tuple:
+        """Hook: the state as whole host-addressable arrays (sharded
+        sessions re-place their shards as replicated)."""
+        return self._state
 
     def finalize(self) -> ValuationResult:
         """Snapshot the running mean as a `ValuationResult` (the session
         remains live; later updates refine the next finalize)."""
         if self._t == 0:
             raise ValueError("no test points seen: call update() first")
-        acc, diag = self._gathered_state()
-        phi = acc / self._t
-        phi = jnp.fill_diagonal(phi, diag / self._t, inplace=False)
+        arrays = self._spec.result_arrays(self._gathered_state(), self._t)
         meta = {
             "method": self.mode,
             "mode": self.mode,
             "engine": self._ENGINE,
+            "streamed": True,
             "k": self.k,
             "n": int(self.x_train.shape[0]),
             "t": self._t,
             "d": int(self.x_train.shape[1]),
             "test_batch": self.test_batch,
             "backend": jax.default_backend(),
+            **{f"opt_{k_}": v for k_, v in self.method_opts.items()},
             **self._resolved,
         }
-        return ValuationResult(method=self.mode, phi=phi, meta=meta)
+        meta["resolved_fill"] = self._resolved.get("fill")
+        return ValuationResult(method=self.mode, meta=meta, **arrays)
 
     # --------------------------------------------------------- persistence
     def _extra_config(self) -> dict:
@@ -163,8 +190,10 @@ class ValuationSession:
     def checkpoint(self, path) -> Path:
         """Persist the partial sums + config to `<path>.npz`.
 
-        State is saved as dense host arrays (sharded sessions gather their
-        row blocks first), so a checkpoint restores under any device count.
+        State is saved as dense host arrays under the spec's stable names
+        ("acc"/"diag" for interaction modes, "vec" for point-value modes;
+        sharded sessions gather their shards first), so a checkpoint
+        restores under any device count.
         """
         base = Path(path)
         if base.suffix == ".npz":
@@ -173,15 +202,16 @@ class ValuationSession:
         cfg = {
             "k": self.k, "mode": self.mode, "test_batch": self.test_batch,
             "t": self._t, "resolved": self._resolved,
+            "method_opts": self.method_opts,
             **self._extra_config(),
         }
-        acc, diag = self._gathered_state()
+        arrays = {
+            name: np.asarray(a)
+            for name, a in zip(self._spec.names, self._gathered_state())
+        }
         out = base.with_suffix(".npz")
         np.savez_compressed(
-            out,
-            acc=np.asarray(acc),
-            diag=np.asarray(diag),
-            config=np.asarray(json.dumps(cfg)),
+            out, config=np.asarray(json.dumps(cfg)), **arrays
         )
         return out
 
@@ -196,19 +226,22 @@ class ValuationSession:
                 **session_opts) -> "ValuationSession":
         """Rebuild a session from `checkpoint()` output plus the (fixed)
         training set; continues exactly where the saved session stopped."""
+        from repro.kernels.stream_kernels import accumulator_spec
+
         base = Path(path)
         if base.suffix != ".npz":
             base = base.with_suffix(".npz")
         with np.load(base) as z:
-            acc = z["acc"]
-            diag = z["diag"]
             cfg = json.loads(str(z["config"]))
+            spec = accumulator_spec(cfg["mode"])
+            arrays = tuple(z[name] for name in spec.names)
         # default to the checkpoint's RESOLVED fill/distance so the restored
         # session runs the same (possibly autotuned) implementations; the
         # caller may override, e.g. when restoring on a different backend.
         # (The sharded engine reports its fill under a rect_-prefixed name
         # from the rectangular registry -- leave those to re-resolve, or
-        # pass fill= explicitly to pin a rect variant.)
+        # pass fill= explicitly to pin a rect variant; point-value modes
+        # have no fill at all.)
         from repro.core.sti_knn import _FILL_FNS
 
         for opt in ("fill", "distance"):
@@ -216,38 +249,40 @@ class ValuationSession:
             if value is None or (opt == "fill" and value not in _FILL_FNS):
                 continue
             session_opts.setdefault(opt, value)
+        if cfg.get("method_opts"):
+            session_opts.setdefault("method_opts", cfg["method_opts"])
         for opt, value in cls._restore_opts(cfg).items():
             session_opts.setdefault(opt, value)
         sess = cls(
             x_train, y_train, k=cfg["k"], mode=cfg["mode"],
             test_batch=cfg["test_batch"], embed_fn=embed_fn, **session_opts,
         )
-        if acc.shape[0] != sess.x_train.shape[0]:
+        if arrays[0].shape[0] != sess.x_train.shape[0]:
             raise ValueError(
-                f"checkpoint is for n={acc.shape[0]} train points, "
+                f"checkpoint is for n={arrays[0].shape[0]} train points, "
                 f"got n={sess.x_train.shape[0]}"
             )
-        sess._place_state(acc, diag)
+        sess._place_state(arrays)
         sess._t = int(cfg["t"])
         return sess
 
-    def _place_state(self, acc, diag) -> None:
-        """Hook: install restored accumulators (sharded sessions re-place
-        them with their row-block shardings)."""
-        self._acc = jnp.asarray(acc)
-        self._diag = jnp.asarray(diag)
+    def _place_state(self, arrays) -> None:
+        """Hook: install restored accumulator arrays (sharded sessions
+        re-place them with their spec shardings)."""
+        self._state = tuple(jnp.asarray(a) for a in arrays)
 
 
 class ShardedValuationSession(ValuationSession):
     """Multi-device streaming valuation: test stream row-sharded over a 1-D
-    mesh, (n, n) accumulator sharded by row blocks ((n/D, n) per device),
-    all-gather of the completed rows only at finalize/checkpoint.
+    mesh, accumulator state sharded per its spec layout ((n/D, n) row blocks
+    for the interaction matrix, (n/D,) rows for vectors), gathered only at
+    finalize/checkpoint.
 
     `shards=None` uses every local device (clamped to a divisor of n via
     `repro.distributed.sharding.shard_count`); `shards=1` -- or a single-
-    device host -- falls back to the plain fused step, so the same code path
-    runs everywhere. `test_batch` is rounded UP to a multiple of the shard
-    count (the validity mask absorbs ragged input).
+    device host -- falls back to the plain single-device step, so the same
+    code path runs everywhere. `test_batch` is rounded UP to a multiple of
+    the shard count (the validity mask absorbs ragged input).
     """
 
     _ENGINE = "sharded"
@@ -262,20 +297,22 @@ class ShardedValuationSession(ValuationSession):
 
     def _build(self, fill, fill_params, distance, distance_params, autotune):
         from repro.distributed.sharding import shard_count
+        from repro.kernels.stream_kernels import accumulator_spec
 
         n = int(self.x_train.shape[0])
+        spec = accumulator_spec(self.mode)
         if self._requested_mesh is not None:
             m = self._requested_mesh
             self.shards = int(m.shape[m.axis_names[0]])
         else:
             self.shards = shard_count(n, self._requested_shards)
         if self.shards <= 1:
-            # single-host fallback: the fused step IS the 1-shard layout.
-            # Rect-registry hints (block_rows/block_cols) are layout hints
-            # for the sharded fill -- drop whatever the square fill cannot
-            # accept so a sharded invocation runs unchanged on a 1-device
-            # host instead of raising.
-            if fill_params and fill != "auto":
+            # single-host fallback: the single-device step IS the 1-shard
+            # layout. Rect-registry hints (block_rows/block_cols) are layout
+            # hints for the sharded interaction fill -- drop whatever the
+            # square fill cannot accept so a sharded invocation runs
+            # unchanged on a 1-device host instead of raising.
+            if spec.kind == "interaction" and fill_params and fill != "auto":
                 from repro.core.sti_knn import _FILL_FNS, _accepted_params
 
                 if fill in _FILL_FNS:
@@ -286,18 +323,21 @@ class ShardedValuationSession(ValuationSession):
                            autotune)
             self._resolved = dict(self._resolved, shards=1)
             return
-        from repro.kernels.sti_pipeline import prepare_sharded_step
+        from repro.kernels.sti_pipeline import prepare_sharded_stream_step
 
         d = int(self.x_train.shape[1])
-        self._step, self._resolved, self.mesh = prepare_sharded_step(
-            n, d, self.k, mesh=self._requested_mesh, shards=self.shards,
-            mode=self.mode, test_batch=self.test_batch, fill=fill,
-            fill_params=fill_params, distance=distance,
-            distance_params=distance_params, autotune=autotune,
+        self._step, self._resolved, self.mesh, self._spec = (
+            prepare_sharded_stream_step(
+                self.mode, n, d, self.k, mesh=self._requested_mesh,
+                shards=self.shards, test_batch=self.test_batch, fill=fill,
+                fill_params=fill_params, distance=distance,
+                distance_params=distance_params, autotune=autotune,
+                method_opts=self.method_opts,
+            )
         )
         self.test_batch = int(self._resolved["test_batch"])
         self._place_state(
-            np.zeros((n, n), np.float32), np.zeros((n,), np.float32)
+            tuple(np.zeros(s, np.float32) for s in self._spec.shapes(n))
         )
         from repro.distributed.sharding import replicated_sharding
 
@@ -321,30 +361,24 @@ class ShardedValuationSession(ValuationSession):
             jax.device_put(mask, vec),
         )
 
-    def _place_state(self, acc, diag) -> None:
+    def _place_state(self, arrays) -> None:
         if self.mesh is None:
-            super()._place_state(acc, diag)
+            super()._place_state(arrays)
             return
-        from repro.distributed.sharding import (
-            row_block_sharding,
-            row_vector_sharding,
-        )
-
         axis = self.mesh.axis_names[0]
-        self._acc = jax.device_put(
-            jnp.asarray(acc), row_block_sharding(self.mesh, axis=axis)
-        )
-        self._diag = jax.device_put(
-            jnp.asarray(diag), row_vector_sharding(self.mesh, axis=axis)
+        shardings = self._spec.shardings(self.mesh, axis)
+        self._state = tuple(
+            jax.device_put(jnp.asarray(a), s)
+            for a, s in zip(arrays, shardings)
         )
 
-    def _gathered_state(self):
+    def _gathered_state(self) -> tuple:
         if self.mesh is None:
-            return self._acc, self._diag
+            return self._state
         from repro.distributed.sharding import replicated_sharding
 
         rep = replicated_sharding(self.mesh)
-        return jax.device_put(self._acc, rep), jax.device_put(self._diag, rep)
+        return tuple(jax.device_put(a, rep) for a in self._state)
 
     def _extra_config(self) -> dict:
         return {"shards": self.shards}

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.methods import INTERACTION_ENGINES, get_method, list_methods
+from repro.core.methods import get_method, list_methods, valid_engines
 from repro.core.results import ValuationResult
 from repro.core.session import ValuationSession
 from repro.core.sti_knn import (
@@ -49,22 +49,26 @@ class DataValuator:
     mode: str = "sti"
     test_batch: int = 256
     # fill="auto" consults the persistent block autotuner cache
-    # (repro.kernels.autotune); engine="fused" streams donated-accumulator
-    # steps through the fused distance->rank->g->fill pipeline, "scan" is the
-    # single-jit lax.scan path, "distributed" the shard_map production cell,
-    # "sharded" the multi-device fused pipeline (row-sharded accumulators,
-    # n^2/D per device; session() then opens a ShardedValuationSession).
+    # (repro.kernels.autotune); engine picks from the method's ENGINES row
+    # (repro.core.methods) -- "fused"/"scan"/"distributed"/"sharded" for
+    # interaction methods, "streamed"/"eager"/"sharded"/"oracle" for point
+    # methods; engine="sharded" makes session() open a
+    # ShardedValuationSession (row-sharded state, 1/D memory per device).
     fill: str = "auto"
-    engine: str = "fused"
+    # None = each method's own default (ENGINES[method][0]); an explicit
+    # engine is validated against this valuator's mode up front
+    engine: Optional[str] = None
 
     def __post_init__(self):
         # fail at construction, not deep inside superdiagonal_g: unknown
         # method / engine names give the registered alternatives up front
         get_method(self.mode)
-        if self.engine not in INTERACTION_ENGINES:
+        ve = valid_engines(self.mode)
+        if self.engine is not None and ve is not None \
+                and self.engine not in ve:
             raise ValueError(
-                f"unknown engine {self.engine!r}; choose from "
-                f"{INTERACTION_ENGINES}"
+                f"unknown engine {self.engine!r} for method {self.mode!r}; "
+                f"choose from {ve}"
             )
         if self.k < 1:
             raise ValueError("k must be >= 1")
@@ -78,11 +82,20 @@ class DataValuator:
         embedded features and return the full `ValuationResult`."""
         m = get_method(method or self.mode)
         accepted = getattr(m, "accepted_options", frozenset())
-        defaults = {"engine": self.engine, "fill": self.fill,
-                    "test_batch": self.test_batch}
+        defaults = {"fill": self.fill, "test_batch": self.test_batch}
+        if self.engine is not None:
+            defaults["engine"] = self.engine
         for name, value in defaults.items():
-            if name in accepted:
-                opts.setdefault(name, value)
+            if name not in accepted:
+                continue
+            if name == "engine":
+                # the valuator's engine is a default, not a mandate: an
+                # interaction engine must not leak into a point method
+                # (and vice versa) when run(method=...) crosses families
+                ve = valid_engines(getattr(m, "name", method or self.mode))
+                if ve is not None and value not in ve:
+                    continue
+            opts.setdefault(name, value)
         return m(
             self._embed(x_train), y_train, self._embed(x_test), y_test,
             k=self.k, **opts,

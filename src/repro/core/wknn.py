@@ -1,5 +1,5 @@
 """Weighted KNN-Shapley: exact Shapley values for the *soft-label weighted*
-KNN utility in O(t n log n).
+KNN utility, streamed in O(t n^2) with no subset enumeration.
 
 Weighted nearest-neighbour valuation (Wang, Mittal & Jia, arXiv 2401.11103)
 generalizes KNN-Shapley to classifiers that weight each neighbour by its
@@ -16,10 +16,15 @@ reverse-cumsum recurrence applied to c instead of m:
     s_{alpha_n} = c(n)/n * min(k, n)/k
     s_{alpha_i} = s_{alpha_{i+1}} + (c(i) - c(i+1))/k * min(k, i)/i
 
-(arXiv 2401.11103's harder *hard-label* weighted-majority utility needs the
-subset-count DP and is out of scope; the brute-force oracle in
-`repro.core.sti_baseline.brute_force_wknn_shapley` verifies this soft-label
-closed form exactly.)
+This closed form is the DEFAULT wknn engine, running on the method-generic
+streaming pipeline (update kernel "wknn" in `repro.kernels.stream_kernels`):
+per test batch it costs one distance row, one sort, and an O(n) recurrence
+-- O(t n^2) total, exactly the paper's complexity class, with nothing 2^n
+anywhere. The O(t n 2^n) brute-force oracle
+(`repro.core.sti_baseline.brute_force_wknn_shapley`) stays registered as
+`engine="oracle"` strictly for parity tests at n <= ~14. (arXiv 2401.11103's
+harder *hard-label* weighted-majority utility needs the subset-count DP and
+is out of scope.)
 
 Weight schemes (all computed from squared distances, batch-invariant):
   * "rbf"     w = exp(-d2 / (2 * sigma_p^2)), sigma_p^2 = mean_j d2[p, j]
@@ -30,13 +35,7 @@ Weight schemes (all computed from squared distances, batch-invariant):
 
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-
-from repro.core.knn_shapley import knn_shapley_from_sorted
-from repro.core.sti_knn import pairwise_sq_dists
 
 __all__ = ["wknn_shapley_values", "distance_weights", "WEIGHT_KINDS"]
 
@@ -61,40 +60,28 @@ def distance_weights(d2: jnp.ndarray, kind: str = "rbf") -> jnp.ndarray:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("k", "weights", "test_batch"))
 def wknn_shapley_values(
     x_train, y_train, x_test, y_test, k: int, *,
-    weights: str = "rbf", test_batch: int = 512
+    weights: str = "rbf", test_batch: int = 512,
+    distance: str = "xla", autotune: bool = False
 ) -> jnp.ndarray:
     """(n,) exact Shapley values of the soft-label weighted KNN utility,
-    averaged over the test set. `weights` is one of WEIGHT_KINDS."""
-    n = x_train.shape[0]
-    t = x_test.shape[0]
-    if t < 1:
-        raise ValueError("need at least one test point")
+    averaged over the test set. `weights` is one of WEIGHT_KINDS.
 
-    def body(acc, batch):
-        xb, yb = batch
-        d2 = pairwise_sq_dists(xb, x_train)
-        w = distance_weights(d2, weights)
-        order = jnp.argsort(d2, axis=-1, stable=True)
-        contrib = jnp.take_along_axis(w, order, axis=-1) * (
-            y_train[order] == yb[:, None]
+    Thin wrapper over the method-generic streaming pipeline (the eager
+    engine of method "wknn"); `ValuationSession(mode="wknn",
+    method_opts={"weights": ...})` streams the identical step. `distance`
+    picks the distance kernel ("xla" default; "auto" consults the autotune
+    cache, which `autotune=True` populates).
+    """
+    if weights not in WEIGHT_KINDS:
+        raise ValueError(
+            f"unknown weight kind {weights!r}; choose from {WEIGHT_KINDS}"
         )
-        s_sorted = knn_shapley_from_sorted(contrib, k)
-        s = jnp.zeros((xb.shape[0], n), jnp.float32).at[
-            jnp.arange(xb.shape[0])[:, None], order
-        ].set(s_sorted)
-        return acc + jnp.sum(s, axis=0), None
+    from repro.kernels.sti_pipeline import stream_point_values
 
-    tb = min(test_batch, t)
-    num = t // tb
-    acc = jnp.zeros((n,), jnp.float32)
-    if num:
-        xr = x_test[: num * tb].reshape(num, tb, -1)
-        yr = y_test[: num * tb].reshape(num, tb)
-        acc, _ = jax.lax.scan(body, acc, (xr, yr))
-    rem = t - num * tb
-    if rem:
-        acc, _ = body(acc, (x_test[num * tb :], y_test[num * tb :]))
-    return acc / t
+    return stream_point_values(
+        "wknn", x_train, y_train, x_test, y_test, int(k),
+        test_batch=test_batch, method_opts={"weights": weights},
+        distance=distance, autotune=autotune,
+    )

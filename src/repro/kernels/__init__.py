@@ -1,4 +1,4 @@
-from repro.kernels import autotune, ops, ref
+from repro.kernels import autotune, ops, ref, stream_kernels
 from repro.kernels.sti_fill import (
     rect_row_view,
     sti_fill_acc_pallas,
@@ -11,14 +11,20 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.sti_pipeline import (
     fused_sti_knn_interactions,
     make_fused_step,
+    make_point_step,
+    make_sharded_point_step,
     make_sharded_step,
+    prepare_sharded_stream_step,
+    prepare_stream_step,
     sharded_sti_knn_interactions,
+    stream_point_values,
 )
 
 __all__ = [
     "autotune",
     "ops",
     "ref",
+    "stream_kernels",
     "sti_fill_pallas",
     "sti_fill_acc_pallas",
     "sti_fill_rect_pallas",
@@ -28,6 +34,11 @@ __all__ = [
     "flash_attention_pallas",
     "fused_sti_knn_interactions",
     "make_fused_step",
+    "make_point_step",
     "make_sharded_step",
+    "make_sharded_point_step",
+    "prepare_stream_step",
+    "prepare_sharded_stream_step",
+    "stream_point_values",
     "sharded_sti_knn_interactions",
 ]

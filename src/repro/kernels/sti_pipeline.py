@@ -1,30 +1,36 @@
-"""Fused streaming STI valuation pipeline: distance -> rank -> g -> fill.
+"""Method-generic streaming valuation pipeline: distance -> rank -> update.
 
 The paper's O(t n^2) bound is only a wall-clock bound if the per-batch
 intermediates stay on the device: this module chains the tiled distance
 kernel (Pallas on TPU, the MXU-friendly XLA expansion elsewhere), the rank
-inversion, the `superdiagonal_g` recurrence, and the registered fill into
-ONE jitted step per test batch, so the (tb, n) d2/rank/u/g tensors are
-internal to a single XLA program and never round-trip HBM between stages.
+inversion, the per-method contribution/`superdiagonal_g` stage, and the
+method's registered update kernel (`repro.kernels.stream_kernels`) into ONE
+jitted step per test batch, so the (tb, n) d2/rank/u/g tensors are internal
+to a single XLA program and never round-trip HBM between stages. EVERY
+registered valuation method streams through this identical step: "sti"/"sii"
+update an (n, n) accumulator + (n,) diagonal via the fill registry;
+"knn_shapley"/"wknn"/"loo" update a single (n,) vector (DESIGN.md Sec. 12).
 
-The (n, n) accumulator and (n,) diagonal are threaded through the step with
-buffer donation (`donate_argnums`): each batch updates them in place, peak
-device memory is O(n^2 + tb * n + fill_chunk * n^2) regardless of how many
-test batches are streamed, and the test set may live on the host (each batch
-is transferred as it is consumed). Donation is skipped on the CPU backend,
-which does not implement it (DESIGN.md Sec. 5; EXPERIMENTS.md "Fused
-pipeline" has the measurements).
+The accumulator state is threaded through the step with buffer donation
+(`donate_argnums`): each batch updates it in place, peak device memory is
+O(state + tb * n + fill_chunk * n^2) regardless of how many test batches are
+streamed, and the test set may live on the host (each batch is transferred
+as it is consumed). Donation is skipped on the CPU backend, which does not
+implement it (DESIGN.md Sec. 5).
 
-Every step carries a per-point validity mask folded into `u` (`g` and the
-diagonal term are linear in `u`, so a masked-out point contributes exactly
-zero): a ragged trailing batch is PADDED to the compiled batch shape by
-`pad_test_batch` instead of tracing a second shape-specialized executable.
+Every step carries a per-point validity mask folded into the contribution
+`u` (every method's update is linear in `u`, so a masked-out point
+contributes exactly zero): a ragged trailing batch is PADDED to the compiled
+batch shape by `pad_test_batch` instead of tracing a second
+shape-specialized executable.
 
     from repro.kernels.sti_pipeline import fused_sti_knn_interactions
     phi = fused_sti_knn_interactions(x_train, y_train, x_test, y_test, k=5)
 
-`make_fused_step` exposes the donated step itself for callers that drive
-their own stream (the serving engine, shard-per-host loops).
+`make_fused_step` / `make_point_step` expose the donated steps themselves
+for callers that drive their own stream (the serving engine, sessions);
+`prepare_stream_step` is the method-generic front door (tuple-state
+contract) that `ValuationSession` drives.
 
 `make_sharded_step` / `prepare_sharded_step` / `sharded_sti_knn_interactions`
 are the multi-device form (DESIGN.md Sec. 10): the test stream is row-sharded
@@ -32,7 +38,10 @@ over a 1-D `compat.shard_map` mesh, the accumulator is sharded by ROW BLOCKS
 of the (n, n) matrix — (n/D, n) per device, so peak accumulator memory falls
 as 1/D — and the only per-step collective is an all-gather of the small
 (tb, n) g/rank tables; the row blocks are complete sums, so finalize needs
-one all-gather and no psum over the matrix.
+one all-gather and no psum over the matrix. Vector-state methods shard the
+(n,) accumulator the same way the interaction diagonal always was
+(`make_sharded_point_step`): the per-step collective is one O(n)
+psum_scatter, never anything n-squared.
 """
 
 from __future__ import annotations
@@ -45,13 +54,17 @@ import jax.numpy as jnp
 
 from repro.core.sti_knn import (
     InteractionMode,
-    accumulate_fill,
-    accumulate_rect_fill,
     pairwise_sq_dists,
     ranks_from_order,
     resolve_fill,
     resolve_rect_fill,
     superdiagonal_g,
+)
+from repro.kernels.stream_kernels import (
+    AccumulatorSpec,
+    UpdateKernel,
+    accumulator_spec,
+    make_update_kernel,
 )
 
 __all__ = [
@@ -59,9 +72,14 @@ __all__ = [
     "make_fused_step",
     "prepare_fused_step",
     "pad_test_batch",
+    "make_point_step",
+    "prepare_stream_step",
     "make_sharded_step",
+    "make_sharded_point_step",
     "prepare_sharded_step",
+    "prepare_sharded_stream_step",
     "sharded_sti_knn_interactions",
+    "stream_point_values",
     "resolve_distance",
 ]
 
@@ -142,18 +160,28 @@ def pad_test_batch(xb, yb, tb: int):
     )
 
 
-def _masked_u_g_ranks(xb, yb, mask, x_train, y_train, k, mode, dist_fn):
-    """Shared stage chain of the fused and sharded steps: distance ->
-    argsort/rank -> masked u -> g. Returns (u, g, ranks); the validity mask
-    is already folded into u (and therefore into g)."""
-    d2 = dist_fn(xb, x_train)                       # (tb, n) on-chip
-    order = jnp.argsort(d2, axis=-1, stable=True)   # (tb, n)
-    ranks = ranks_from_order(order)
-    u = (y_train[order] == yb[:, None]).astype(jnp.float32) * (
-        mask / k
-    )[:, None]
-    g = superdiagonal_g(u, k, mode=mode)            # (tb, n)
-    return u, g, ranks
+def _stream_body(kernel: UpdateKernel, k: int, dist_fn: Callable) -> Callable:
+    """The ONE generic per-batch step body every method instantiates:
+
+        body(state, xb, yb, mask, x_train, y_train) -> state
+
+    distance -> argsort/rank -> sorted label match -> method contribution
+    (mask folded in) -> optional `superdiagonal_g` -> the method's
+    registered update kernel. The per-method parts live entirely in
+    `kernel` (repro.kernels.stream_kernels); everything here is shared.
+    """
+
+    def body(state, xb, yb, mask, x_train, y_train):
+        d2 = dist_fn(xb, x_train)                       # (tb, n) on-chip
+        order = jnp.argsort(d2, axis=-1, stable=True)   # (tb, n)
+        ranks = ranks_from_order(order)
+        match = (y_train[order] == yb[:, None]).astype(jnp.float32)
+        u = kernel.contrib(d2, order, match, mask)
+        g = (superdiagonal_g(u, k, mode=kernel.g_mode)
+             if kernel.needs_g else None)
+        return kernel.update(state, u, g, ranks, mask)
+
+    return body
 
 
 @functools.lru_cache(maxsize=None)
@@ -166,7 +194,8 @@ def make_fused_step(
     distance_static: tuple = (),
     donate: Optional[bool] = None,
 ) -> Callable:
-    """Build the jitted fused step:
+    """Build the jitted fused interaction step (a thin instantiation of the
+    generic `_stream_body` with the "sti"/"sii" update kernel):
 
         step(acc, diag, xb, yb, mask, x_train, y_train) -> (acc, diag)
 
@@ -180,21 +209,75 @@ def make_fused_step(
     Cached per static configuration, so repeated streaming runs reuse the
     executable.
     """
-    dist_fn = _distance_fn(distance, distance_static)
+    body = _stream_body(
+        make_update_kernel(mode, k, fill=fill, fill_static=fill_static),
+        int(k), _distance_fn(distance, distance_static),
+    )
     if donate is None:
         donate = jax.default_backend() != "cpu"
 
     def step(acc, diag, xb, yb, mask, x_train, y_train):
-        u, g, ranks = _masked_u_g_ranks(
-            xb, yb, mask, x_train, y_train, k, mode, dist_fn
-        )
-        acc = accumulate_fill(acc, g, ranks, fill, fill_static)
-        # u in train coordinates is u[p, ranks[p, i]] = mask_p 1[y_i==y_p]/k:
-        # the diag term rides on the fill stage's u, masked for free.
-        diag = diag + jnp.sum(jnp.take_along_axis(u, ranks, axis=-1), axis=0)
-        return acc, diag
+        return body((acc, diag), xb, yb, mask, x_train, y_train)
 
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def make_point_step(
+    method: str,
+    k: int,
+    method_static: tuple = (),
+    distance: str = "xla",
+    distance_static: tuple = (),
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Build the jitted vector-accumulator step for a point-value method
+    ("knn_shapley", "wknn", "loo"):
+
+        step(vec, xb, yb, mask, x_train, y_train) -> vec
+
+    vec (n,) f32 accumulates the SUM of per-test-point values (finalize
+    divides by t); it is donated off-CPU exactly like the interaction
+    accumulators. `method_static` is the hashable method-option tuple (e.g.
+    (("weights", "rbf"),) for wknn). Same generic body, same pad/mask
+    contract, same executable-per-configuration caching as the fused step.
+    """
+    body = _stream_body(
+        make_update_kernel(method, k, opts=dict(method_static)),
+        int(k), _distance_fn(distance, distance_static),
+    )
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def step(vec, xb, yb, mask, x_train, y_train):
+        return body((vec,), xb, yb, mask, x_train, y_train)[0]
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def _method_static(method_opts: Optional[dict]) -> tuple:
+    """Method options as the hashable static tuple the step caches key on."""
+    return tuple(sorted((method_opts or {}).items()))
+
+
+def _tuple_state(inner: Callable) -> Callable:
+    """Adapt an unpacked-state step (acc, diag, ...) to the uniform
+    tuple-state contract `step(state, *args) -> state`."""
+
+    def step(state, *args):
+        return tuple(inner(*state, *args))
+
+    return step
+
+
+def _vector_state(inner: Callable) -> Callable:
+    """Adapt a bare-vector step (vec, ...) to the uniform tuple-state
+    contract `step(state, *args) -> state`."""
+
+    def step(state, *args):
+        return (inner(state[0], *args),)
+
+    return step
 
 
 def prepare_fused_step(
@@ -232,6 +315,110 @@ def prepare_fused_step(
     )
     resolved = {"fill": fill_name, "distance": dist_name}
     return step, resolved
+
+
+def prepare_stream_step(
+    method: str,
+    n: int,
+    d: int,
+    k: int,
+    *,
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+    method_opts: Optional[dict] = None,
+) -> tuple[Callable, dict, "AccumulatorSpec"]:
+    """Method-generic form of `prepare_fused_step`: resolve the concrete
+    implementations for ANY registered streaming method and return
+    `(step, resolved, spec)` with the uniform tuple-state contract
+
+        step(state, xb, yb, mask, x_train, y_train) -> state
+
+    where `state` is `spec.init(n)`-shaped ((acc, diag) for interaction
+    methods, (vec,) for point-value methods). Interaction methods resolve
+    through the fill registry exactly as `prepare_fused_step`; point methods
+    have no fill stage (resolved["fill"] is None) but share the distance
+    resolution. `method_opts` carries method statics such as the wknn
+    weight kind. This is the per-batch unit `ValuationSession` drives.
+    """
+    spec = accumulator_spec(method)
+    tb = max(1, int(test_batch))
+    if spec.kind == "interaction":
+        inner, resolved = prepare_fused_step(
+            n, d, k, mode=method, test_batch=tb, fill=fill,
+            fill_params=fill_params, distance=distance,
+            distance_params=distance_params, autotune=autotune,
+        )
+        return _tuple_state(inner), dict(resolved), spec
+    dist_name, dist_static = resolve_distance(
+        distance, tb, n, d, distance_params=distance_params,
+        autotune=autotune,
+    )
+    inner = make_point_step(
+        method, int(k), _method_static(method_opts), dist_name, dist_static,
+    )
+    return _vector_state(inner), {"fill": None, "distance": dist_name}, spec
+
+
+def stream_point_values(
+    method: str,
+    x_train: jnp.ndarray,
+    y_train: jnp.ndarray,
+    x_test: jnp.ndarray,
+    y_test: jnp.ndarray,
+    k: int,
+    *,
+    test_batch: int = 512,
+    distance: str = "xla",
+    distance_params: Optional[dict] = None,
+    method_opts: Optional[dict] = None,
+    autotune: bool = False,
+) -> jnp.ndarray:
+    """(n,) per-point values of `method` ("knn_shapley" | "wknn" | "loo"),
+    averaged over the test set, via the generic streaming pipeline.
+
+    One-shot twin of `fused_sti_knn_interactions` for vector-state methods:
+    streams ceil(t / test_batch) donated steps, pads the ragged trailing
+    batch with a zero validity mask (exact -- every update kernel is linear
+    in the masked contribution), and divides by t at the end. The public
+    `knn_shapley_values` / `wknn_shapley_values` / `loo_values` functions
+    are thin wrappers over this driver.
+    """
+    spec = accumulator_spec(method)
+    if spec.kind != "point":
+        raise ValueError(
+            f"method {method!r} streams {spec.kind} state, not point "
+            f"values; use fused_sti_knn_interactions / a ValuationSession "
+            f"for interaction methods"
+        )
+    if x_train.ndim != 2 or x_test.ndim != 2:
+        raise ValueError("features must be (num_points, dim)")
+    if k < 1:
+        raise ValueError("k must be >= 1")
+    n, d = x_train.shape
+    t = x_test.shape[0]
+    if t < 1:
+        raise ValueError("need at least one test point")
+    tb = max(1, min(int(test_batch), t))
+    step, _, spec = prepare_stream_step(
+        method, n, d, k, test_batch=tb, distance=distance,
+        distance_params=distance_params, autotune=autotune,
+        method_opts=method_opts,
+    )
+    state = spec.init(n)
+    x_train = jnp.asarray(x_train)
+    y_train = jnp.asarray(y_train)
+    for start in range(0, t, tb):
+        xb, yb, mask = pad_test_batch(
+            jnp.asarray(x_test[start : start + tb]),
+            jnp.asarray(y_test[start : start + tb]),
+            tb,
+        )
+        state = step(state, xb, yb, mask, x_train, y_train)
+    return spec.result_arrays(state, t)["point_values"]
 
 
 def fused_sti_knn_interactions(
@@ -322,35 +509,21 @@ def make_sharded_step(
 
     Row blocks are therefore complete sums over every test point seen: no
     psum is needed at finalize, only an all-gather of the rows. Accumulators
-    are donated off-CPU, exactly like the fused step.
+    are donated off-CPU, exactly like the fused step. Like `make_fused_step`
+    this is a thin instantiation of the generic `_stream_body`, with the
+    interaction kernel's shard_map-local update variant (`axis=` bound).
     """
-    from repro.kernels.sti_fill import rect_row_view
-
-    dist_fn = _distance_fn(distance, distance_static)
+    body = _stream_body(
+        make_update_kernel(mode, k, fill=fill, fill_static=fill_static,
+                           axis=axis),
+        int(k), _distance_fn(distance, distance_static),
+    )
     if donate is None:
         donate = jax.default_backend() != "cpu"
 
     def local_step(acc, diag, xb, yb, mask, x_train, y_train):
         # local views: acc (nl, n), diag (nl,), xb (tb/D, d), mask (tb/D,)
-        nl = acc.shape[0]
-        u, g, ranks = _masked_u_g_ranks(
-            xb, yb, mask, x_train, y_train, k, mode, dist_fn
-        )
-        u_train = jnp.take_along_axis(u, ranks, axis=-1)   # (tb/D, n)
-        g_all = jax.lax.all_gather(g, axis, axis=0, tiled=True)
-        r_all = jax.lax.all_gather(ranks, axis, axis=0, tiled=True)
-        # this device's (tb, nl) row window of the global rank space
-        r_rows = rect_row_view(r_all, jax.lax.axis_index(axis) * nl, nl)
-        acc = accumulate_rect_fill(acc, g_all, r_rows, r_all, fill,
-                                   fill_static)
-        # the diag update reduces over the test dim, so it needs only a
-        # reduce-scatter of the (n,) local partial (tiled block i lands on
-        # device i = exactly this device's diag rows) -- O(n) bytes, not an
-        # O(tb n) gather like g/ranks, which the fill genuinely needs whole
-        diag = diag + jax.lax.psum_scatter(
-            jnp.sum(u_train, axis=0), axis, tiled=True
-        )
-        return acc, diag
+        return body((acc, diag), xb, yb, mask, x_train, y_train)
 
     from jax.sharding import PartitionSpec as P
 
@@ -372,6 +545,60 @@ def make_sharded_step(
         check_vma=False,
     )
     return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def make_sharded_point_step(
+    mesh,
+    method: str,
+    k: int,
+    method_static: tuple = (),
+    distance: str = "xla",
+    distance_static: tuple = (),
+    axis: str = "shards",
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Multi-device form of `make_point_step` over a 1-D `mesh`:
+
+        step(vec, xb, yb, mask, x_train, y_train) -> vec
+
+    with vec (n,) sharded P(axis) -- each device owns an (n/D,) row block,
+    exactly the layout the interaction diagonal always used -- and the test
+    batch row-sharded P(axis). Per device and step: distance/rank/values on
+    the LOCAL (tb/D, n) slice, then ONE O(n) psum_scatter of the per-train
+    partial sum (tiled block i lands on device i's rows). No O(n^2) state,
+    no O(tb n) gather: point methods need no cross-device rank tables.
+    """
+    body = _stream_body(
+        make_update_kernel(method, k, opts=dict(method_static), axis=axis),
+        int(k), _distance_fn(distance, distance_static),
+    )
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def local_step(vec, xb, yb, mask, x_train, y_train):
+        # local views: vec (n/D,), xb (tb/D, d), mask (tb/D,)
+        return body((vec,), xb, yb, mask, x_train, y_train)[0]
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    step = compat.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(
+            P(axis),         # vec rows
+            P(axis, None),   # test batch rows
+            P(axis),         # test labels
+            P(axis),         # validity mask
+            P(None, None),   # x_train replicated
+            P(None),         # y_train replicated
+        ),
+        out_specs=P(axis),
+        check_vma=False,
+    )
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
 
 
 def prepare_sharded_step(
@@ -438,6 +665,70 @@ def prepare_sharded_step(
         "test_batch": int(tb),
     }
     return step, resolved, mesh
+
+
+def prepare_sharded_stream_step(
+    method: str,
+    n: int,
+    d: int,
+    k: int,
+    *,
+    mesh=None,
+    shards: Optional[int] = None,
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+    method_opts: Optional[dict] = None,
+) -> tuple[Callable, dict, "jax.sharding.Mesh", "AccumulatorSpec"]:
+    """Method-generic form of `prepare_sharded_step`: resolve mesh plus
+    concrete implementations for ANY streaming method and return
+    `(step, resolved, mesh, spec)` with the tuple-state contract of
+    `prepare_stream_step`. Interaction methods route through the
+    rectangular fill registry exactly as before; point-value methods build
+    the O(n)-collective vector step (`make_sharded_point_step`) and report
+    resolved["fill"] = None. Both require n to divide evenly into the shard
+    count (the per-device row blocks are exact) and round `test_batch` UP
+    to a multiple of it (the validity mask absorbs the difference).
+    """
+    spec = accumulator_spec(method)
+    if spec.kind == "interaction":
+        inner, resolved, mesh = prepare_sharded_step(
+            n, d, k, mesh=mesh, shards=shards, mode=method,
+            test_batch=test_batch, fill=fill, fill_params=fill_params,
+            distance=distance, distance_params=distance_params,
+            autotune=autotune,
+        )
+        return _tuple_state(inner), resolved, mesh, spec
+    from repro.distributed.sharding import shard_count, valuation_mesh
+
+    if mesh is None:
+        mesh = valuation_mesh(shard_count(n, shards))
+    axis = mesh.axis_names[0]
+    num = mesh.shape[axis]
+    if n % num:
+        raise ValueError(
+            f"n={n} must divide evenly into {num} row shards "
+            f"(per-device blocks are exactly (n/D,))"
+        )
+    tb = -(-max(1, int(test_batch)) // num) * num
+    dist_name, dist_static = resolve_distance(
+        distance, tb // num, n, d, distance_params=distance_params,
+        autotune=autotune,
+    )
+    inner = make_sharded_point_step(
+        mesh, method, int(k), _method_static(method_opts),
+        dist_name, dist_static, axis=axis,
+    )
+    resolved = {
+        "fill": None,
+        "distance": dist_name,
+        "shards": int(num),
+        "test_batch": int(tb),
+    }
+    return _vector_state(inner), resolved, mesh, spec
 
 
 def sharded_sti_knn_interactions(

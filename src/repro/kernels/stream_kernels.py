@@ -1,0 +1,329 @@
+"""Method-generic streaming valuation: accumulator specs + update kernels.
+
+The fused/sharded pipeline (`repro.kernels.sti_pipeline`) streams test
+points through a fixed-shape accumulator update -- that is what makes the
+paper's O(t n^2) a wall-clock bound. This module factors the part of that
+step that actually differs between valuation methods into two small
+objects, so every registered method (interactions AND per-point values)
+rides the identical distance -> rank -> contribution -> update pipeline
+(DESIGN.md Sec. 12):
+
+  * `AccumulatorSpec` -- the shape/dtype/sharding contract of a method's
+    running state: an (n, n) row-blocked matrix plus (n,) diagonal for the
+    interaction methods, a single (n,) vector for the point-value methods
+    ("knn_shapley", "wknn", "loo"). The spec owns init, the per-array
+    partition specs for the sharded engine, the checkpoint array names,
+    and the finalize (divide-by-t) rule.
+  * `UpdateKernel` -- the per-method pure functions the generic step calls:
+    `contrib(d2, order, match, mask) -> u` (the sorted-coordinate per-point
+    contribution; the validity mask is folded in here, so padded test rows
+    contribute exactly zero through every method) and
+    `update(state, u, g, ranks, mask) -> state`.
+
+Kernels are built by registered FACTORIES (`register_update_kernel`) keyed
+by method name: a factory binds the static configuration -- k, method
+options such as the wknn weight kind, the resolved fill, and the mesh axis
+name for the sharded variant -- and returns the closures the step jits.
+`axis=None` builds the single-device update; a mesh axis name builds the
+shard_map-local update (rect row-block fill + g/rank all-gather for
+interactions, an O(n) psum_scatter of the per-train partial for vectors).
+
+Built-in registrations: "sti", "sii" (interaction state), "knn_shapley",
+"wknn", "loo" (vector state). The wknn kernel is the exact O(t n^2)
+weighted-KNN Shapley recurrence (soft-label weighted utility, arXiv
+2401.11103 family): no 2^n subset enumeration anywhere on this path -- the
+brute-force oracle survives only as the `engine="oracle"` parity check in
+`repro.core.methods`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.sti_knn import accumulate_fill, accumulate_rect_fill
+
+__all__ = [
+    "AccumulatorSpec",
+    "UpdateKernel",
+    "INTERACTION_STATE",
+    "POINT_STATE",
+    "register_update_kernel",
+    "make_update_kernel",
+    "accumulator_spec",
+    "stream_methods",
+    "has_stream_kernel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatorSpec:
+    """Shape/dtype/sharding contract of one method family's running state.
+
+    `names` are the checkpoint array names (stable across sessions);
+    `layouts` name each array's sharded placement: "matrix" = (n, n) row
+    blocks ((n/D, n) per device), "vector" = (n,) row-sharded ((n/D,) per
+    device). Instances are frozen; the two canonical ones are
+    `INTERACTION_STATE` and `POINT_STATE` below.
+    """
+
+    kind: str                    # "interaction" | "point"
+    names: tuple[str, ...]       # checkpoint / npz array names
+    layouts: tuple[str, ...]     # "matrix" | "vector" per array
+
+    def shapes(self, n: int) -> tuple[tuple[int, ...], ...]:
+        """Array shapes for an n-point training set, in `names` order."""
+        return tuple(
+            (n, n) if lay == "matrix" else (n,) for lay in self.layouts
+        )
+
+    def init(self, n: int) -> tuple[jnp.ndarray, ...]:
+        """Zero-initialized f32 state tuple for an n-point training set."""
+        return tuple(jnp.zeros(s, jnp.float32) for s in self.shapes(n))
+
+    def partition_specs(self, axis: str) -> tuple[P, ...]:
+        """Per-array PartitionSpecs over the 1-D valuation mesh `axis`
+        (row blocks for matrices, row shards for vectors)."""
+        return tuple(
+            P(axis, None) if lay == "matrix" else P(axis)
+            for lay in self.layouts
+        )
+
+    def shardings(self, mesh, axis: str):
+        """Per-array NamedShardings on `mesh` (device_put placement of a
+        restored/initial state in a sharded session)."""
+        from jax.sharding import NamedSharding
+
+        return tuple(NamedSharding(mesh, s)
+                     for s in self.partition_specs(axis))
+
+    def result_arrays(self, state: tuple, t: int) -> dict:
+        """Finalize a state of t accumulated test points into the
+        `ValuationResult` array kwargs: {"phi": ...} for interaction state
+        (running mean, diagonal = main terms), {"point_values": ...} for
+        vector state."""
+        if self.kind == "interaction":
+            acc, diag = state
+            phi = jnp.fill_diagonal(acc / t, diag / t, inplace=False)
+            return {"phi": phi}
+        return {"point_values": state[0] / t}
+
+
+INTERACTION_STATE = AccumulatorSpec(
+    "interaction", ("acc", "diag"), ("matrix", "vector")
+)
+POINT_STATE = AccumulatorSpec("point", ("vec",), ("vector",))
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateKernel:
+    """One method's bound streaming-step closures (built by a factory).
+
+    `contrib(d2, order, match, mask) -> u` maps the shared pipeline
+    intermediates (squared distances, argsort order, sorted label match,
+    validity mask) to the method's sorted-coordinate contribution vector;
+    `update(state, u, g, ranks, mask) -> state` folds one test batch into
+    the accumulator state (`g` is None unless `needs_g`). Both are pure and
+    trace into the enclosing jit.
+    """
+
+    method: str
+    spec: AccumulatorSpec
+    needs_g: bool                      # compute superdiagonal_g before update
+    g_mode: Optional[str]              # "sti" | "sii" | None
+    contrib: Callable
+    update: Callable
+
+
+_KERNEL_FACTORIES: dict[str, tuple[AccumulatorSpec, Callable]] = {}
+
+
+def register_update_kernel(method: str, spec: AccumulatorSpec,
+                           factory: Callable) -> None:
+    """Register a streaming update kernel for `method`: its state contract
+    `spec` plus the factory that builds the bound closures.
+
+    `factory(method, k, opts, fill, fill_static, axis) -> UpdateKernel`
+    binds the static configuration (axis=None for the single-device step, a
+    mesh axis name for the shard_map-local step) and returns pure closures;
+    the kernel it returns must carry the same `spec` registered here (the
+    spec is registered separately so `accumulator_spec` lookups never have
+    to build a throwaway kernel with placeholder statics).
+    """
+    _KERNEL_FACTORIES[method] = (spec, factory)
+
+
+def stream_methods() -> list[str]:
+    """Sorted names of every method with a registered streaming kernel."""
+    return sorted(_KERNEL_FACTORIES)
+
+
+def has_stream_kernel(method: str) -> bool:
+    """Whether `method` can run on the generic streaming engine."""
+    return method in _KERNEL_FACTORIES
+
+
+def make_update_kernel(
+    method: str,
+    k: int,
+    *,
+    opts: Optional[dict] = None,
+    fill: Optional[str] = None,
+    fill_static: tuple = (),
+    axis: Optional[str] = None,
+) -> UpdateKernel:
+    """Build the bound `UpdateKernel` for `method` (see module docstring).
+
+    `opts` are method statics (e.g. {"weights": "rbf"} for wknn); `fill` /
+    `fill_static` name the resolved fill for interaction kernels (the
+    RECTANGULAR registry entry when `axis` is given); `axis` selects the
+    sharded (shard_map-local) update variant.
+    """
+    if method not in _KERNEL_FACTORIES:
+        raise ValueError(
+            f"no streaming kernel for method {method!r}; registered: "
+            f"{stream_methods()}"
+        )
+    return _KERNEL_FACTORIES[method][1](
+        method, int(k), dict(opts or {}), fill, fill_static, axis
+    )
+
+
+def accumulator_spec(method: str) -> AccumulatorSpec:
+    """The registered `AccumulatorSpec` a method streams into."""
+    if method not in _KERNEL_FACTORIES:
+        raise ValueError(
+            f"no streaming kernel for method {method!r}; registered: "
+            f"{stream_methods()}"
+        )
+    return _KERNEL_FACTORIES[method][0]
+
+
+# ------------------------------------------------------------- interactions
+def _interaction_factory(mode: str) -> Callable:
+    """Factory for the "sti"/"sii" pair-interaction kernels: (n, n) acc of
+    off-diagonal sums + (n,) diag of main terms, via the (rect) fill
+    registries of `repro.core.sti_knn`."""
+
+    def factory(method, k, opts, fill, fill_static, axis):
+        def contrib(d2, order, match, mask):
+            return match * (mask / k)[:, None]
+
+        if axis is None:
+            def update(state, u, g, ranks, mask):
+                acc, diag = state
+                acc = accumulate_fill(acc, g, ranks, fill, fill_static)
+                # u in train coordinates is u[p, ranks[p, i]] =
+                # mask_p 1[y_i==y_p]/k: the diag term rides on the fill
+                # stage's u, masked for free.
+                diag = diag + jnp.sum(
+                    jnp.take_along_axis(u, ranks, axis=-1), axis=0
+                )
+                return (acc, diag)
+        else:
+            def update(state, u, g, ranks, mask):
+                from repro.kernels.sti_fill import rect_row_view
+
+                # local views: acc (nl, n), diag (nl,), u/ranks (tb/D, n)
+                acc, diag = state
+                nl = acc.shape[0]
+                u_train = jnp.take_along_axis(u, ranks, axis=-1)
+                g_all = jax.lax.all_gather(g, axis, axis=0, tiled=True)
+                r_all = jax.lax.all_gather(ranks, axis, axis=0, tiled=True)
+                # this device's (tb, nl) row window of the global rank space
+                r_rows = rect_row_view(
+                    r_all, jax.lax.axis_index(axis) * nl, nl
+                )
+                acc = accumulate_rect_fill(
+                    acc, g_all, r_rows, r_all, fill, fill_static
+                )
+                # the diag update reduces over the test dim, so it needs
+                # only a reduce-scatter of the (n,) local partial -- O(n)
+                # bytes, not an O(tb n) gather like g/ranks, which the fill
+                # genuinely needs whole
+                diag = diag + jax.lax.psum_scatter(
+                    jnp.sum(u_train, axis=0), axis, tiled=True
+                )
+                return (acc, diag)
+
+        return UpdateKernel(method, INTERACTION_STATE, True, mode,
+                            contrib, update)
+
+    return factory
+
+
+# ------------------------------------------------------------ point values
+def _match_contrib(d2, order, match, mask, k, opts):
+    """Masked 0/1 label match in sorted coordinates (knn_shapley / loo)."""
+    return match * mask[:, None]
+
+
+def _wknn_contrib(d2, order, match, mask, k, opts):
+    """Masked weighted contribution c_j = w_j * 1[y_j == y_test] in sorted
+    coordinates -- the soft-label weighted KNN utility's per-point value."""
+    from repro.core.wknn import distance_weights
+
+    w = distance_weights(d2, opts.get("weights", "rbf"))
+    return jnp.take_along_axis(w, order, axis=-1) * match * mask[:, None]
+
+
+def _shapley_point_values(u, ranks, k, opts):
+    """(tb, n) per-test-point Shapley values in TRAIN coordinates via the
+    Jia et al. reverse-cumsum recurrence -- linear in `u`, so the folded
+    validity mask zeroes padded rows exactly. Shared by "knn_shapley"
+    (u = 0/1 match) and "wknn" (u = weighted contribution): the recurrence
+    proof only uses linearity of the utility in the per-point values."""
+    from repro.core.knn_shapley import knn_shapley_from_sorted
+
+    return jnp.take_along_axis(knn_shapley_from_sorted(u, k), ranks, axis=-1)
+
+
+def _loo_point_values(u, ranks, k, opts):
+    """(tb, n) leave-one-out deltas in TRAIN coordinates: removing sorted
+    point j < k slides the (k+1)-th neighbour in, delta = (u[j] - u[k])/k;
+    points outside the window contribute zero."""
+    n = u.shape[-1]
+    nxt = u[..., k:k + 1] if n > k else jnp.zeros_like(u[..., :1])
+    in_window = (jnp.arange(n) < k)[None, :]
+    delta = jnp.where(in_window, (u - nxt) / k, 0.0)
+    return jnp.take_along_axis(delta, ranks, axis=-1)
+
+
+def _point_factory(contrib_fn: Callable, values_fn: Callable) -> Callable:
+    """Factory builder for vector-accumulator methods: `values_fn` maps the
+    batch to (tb, n) per-train-point values in train coordinates; the update
+    is their test-dim sum (psum_scattered onto the local (n/D,) rows when
+    sharded -- the vector twin of the interaction diag update)."""
+
+    def factory(method, k, opts, fill, fill_static, axis):
+        def contrib(d2, order, match, mask):
+            return contrib_fn(d2, order, match, mask, k, opts)
+
+        def update(state, u, g, ranks, mask):
+            part = jnp.sum(values_fn(u, ranks, k, opts), axis=0)
+            if axis is not None:
+                part = jax.lax.psum_scatter(part, axis, tiled=True)
+            return (state[0] + part,)
+
+        return UpdateKernel(method, POINT_STATE, False, None,
+                            contrib, update)
+
+    return factory
+
+
+register_update_kernel("sti", INTERACTION_STATE, _interaction_factory("sti"))
+register_update_kernel("sii", INTERACTION_STATE, _interaction_factory("sii"))
+register_update_kernel(
+    "knn_shapley", POINT_STATE,
+    _point_factory(_match_contrib, _shapley_point_values),
+)
+register_update_kernel(
+    "wknn", POINT_STATE, _point_factory(_wknn_contrib, _shapley_point_values)
+)
+register_update_kernel(
+    "loo", POINT_STATE, _point_factory(_match_contrib, _loo_point_values)
+)

@@ -3,12 +3,14 @@
   PYTHONPATH=src python -m repro.launch.valuate --n 512 --t 128 --k 5
 
 Pipeline: (synthetic or embedded) features -> valuation method from the
-registry (any of `repro.core.list_methods()`; interaction methods run on the
-fused / scan / distributed engine) -> `ValuationResult` analytics
+registry (any of `repro.core.list_methods()`, each on any engine from its
+`repro.core.methods.ENGINES` row) -> `ValuationResult` analytics
 (efficiency check, mislabel detection quality). `--save` persists the
 result artifact (npz + JSON metadata); `--stream` drives the same
 computation through a `ValuationSession` in test-batch increments to
-exercise the constant-memory online path.
+exercise the constant-memory online path -- for EVERY method with a
+streaming kernel (interactions and per-point values alike), and
+`--engine sharded --stream` opens the multi-device sharded session.
 """
 
 from __future__ import annotations
@@ -20,11 +22,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import get_method, knn_shapley_values, list_methods, loo_values
+from repro.core.methods import valid_engines
 from repro.core.session import ShardedValuationSession, ValuationSession
 from repro.data import make_circles, flip_labels
 
 
 def main():
+    """Parse CLI args, run the requested method/engine, print analytics."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=512)
     ap.add_argument("--t", type=int, default=128)
@@ -32,23 +36,23 @@ def main():
     ap.add_argument("--noise-frac", type=float, default=0.1)
     ap.add_argument("--method", "--mode", dest="method", default="sti",
                     help=f"registered valuation method: {list_methods()}")
-    ap.add_argument("--engine", default="fused",
-                    choices=["fused", "scan", "distributed", "sharded"],
-                    help="interaction engine: fused = streaming "
-                         "distance->rank->g->fill pipeline with donated "
-                         "accumulators; scan = single-jit path; distributed "
-                         "= shard_map production cell on the local mesh; "
-                         "sharded = multi-device fused pipeline (test "
-                         "stream + accumulator row blocks sharded, n^2/D "
-                         "accumulator memory per device)")
+    ap.add_argument("--engine", default=None,
+                    help="execution engine; default = the method's first "
+                         "ENGINES entry (repro.core.methods.ENGINES). "
+                         "Interaction methods: fused | scan | distributed "
+                         "| sharded. Point methods: streamed | eager | "
+                         "sharded | oracle (oracle: parity only, n <= 16)")
     ap.add_argument("--shards", type=int, default=None,
                     help="device count for --engine sharded (default: all "
                          "local devices, clamped to a divisor of n)")
     ap.add_argument("--fill", default="auto",
                     help="fill registry entry (auto|chunked|onehot|xla|"
-                         "pallas); --engine sharded resolves it against "
-                         "the rectangular fill registry (Pallas row-block "
-                         "kernel on TPU, XLA block scan elsewhere)")
+                         "pallas) for interaction methods; --engine sharded "
+                         "resolves it against the rectangular fill registry "
+                         "(Pallas row-block kernel on TPU, XLA block scan "
+                         "elsewhere). Point methods have no fill stage")
+    ap.add_argument("--weights", default="rbf",
+                    help="wknn weight kind (rbf|inverse|uniform)")
     ap.add_argument("--test-batch", type=int, default=256)
     ap.add_argument("--autotune", action="store_true",
                     help="time fill/block candidates for this size once and "
@@ -57,12 +61,17 @@ def main():
                     help="alias for --engine distributed")
     ap.add_argument("--stream", action="store_true",
                     help="drive the valuation through a streaming "
-                         "ValuationSession instead of one-shot")
+                         "ValuationSession instead of one-shot (any method "
+                         "with a streaming kernel)")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="persist the ValuationResult to PATH.npz + PATH.json")
     args = ap.parse_args()
     if args.distributed:
         args.engine = "distributed"
+    ve = valid_engines(args.method)
+    if args.engine is not None and ve is not None and args.engine not in ve:
+        ap.error(f"--engine {args.engine} invalid for --method "
+                 f"{args.method}; valid engines: {ve}")
 
     x, y_clean = make_circles(args.n // 2, noise=0.08, seed=0)
     y, flipped = flip_labels(y_clean, args.noise_frac, 2, seed=1)
@@ -77,29 +86,39 @@ def main():
     accepted = getattr(method, "accepted_options", frozenset())
     opts = {name: value for name, value in dict(
         engine=args.engine, fill=args.fill, test_batch=args.test_batch,
-        autotune=args.autotune, shards=args.shards).items()
-        if name in accepted}
+        autotune=args.autotune, shards=args.shards,
+        weights=args.weights).items()
+        if name in accepted and value is not None}
     # streaming runs through a ValuationSession (sharded when --engine
-    # sharded), which folds the sti/sii step; other methods fall back to
-    # one-shot with a note
-    stream_mode = getattr(method, "mode", None)
-    if args.stream and stream_mode not in ("sti", "sii"):
-        print(f"note: --stream needs an sti/sii interaction method; "
-              f"running {args.method} one-shot")
-    elif args.stream and args.engine not in ("fused", "sharded"):
-        print(f"note: --stream folds the fused session step; "
+    # sharded): every built-in method has a streaming kernel; a custom
+    # registered method without one falls back to one-shot with a note
+    from repro.kernels.stream_kernels import has_stream_kernel
+
+    can_stream = has_stream_kernel(args.method)
+    if args.stream and not can_stream:
+        print(f"note: method {args.method} has no streaming kernel; "
+              f"running one-shot")
+    elif args.stream and args.engine not in (None, "fused", "streamed",
+                                             "sharded"):
+        print(f"note: --stream folds the session step; "
               f"--engine {args.engine} ignored")
     t0 = time.time()
-    if args.stream and stream_mode in ("sti", "sii"):
+    if args.stream and can_stream:
+        kw = dict(k=args.k, mode=args.method, test_batch=args.test_batch,
+                  fill=args.fill, autotune=args.autotune)
+        from repro.kernels.stream_kernels import accumulator_spec
+
+        if accumulator_spec(args.method).kind == "point":
+            # match the one-shot registry path: point engines pin
+            # distance="xla" so --stream and non-stream runs of the same
+            # invocation resolve the same distance kernel
+            kw["distance"] = "xla"
+        if args.method == "wknn":
+            kw["method_opts"] = {"weights": args.weights}
         if args.engine == "sharded":
-            sess = ShardedValuationSession(
-                x, y, k=args.k, mode=stream_mode,
-                test_batch=args.test_batch, fill=args.fill,
-                autotune=args.autotune, shards=args.shards)
+            sess = ShardedValuationSession(x, y, shards=args.shards, **kw)
         else:
-            sess = ValuationSession(
-                x, y, k=args.k, mode=stream_mode, test_batch=args.test_batch,
-                fill=args.fill, autotune=args.autotune)
+            sess = ValuationSession(x, y, **kw)
         for start in range(0, args.t, args.test_batch):
             sess.update(xt[start:start + args.test_batch],
                         yt[start:start + args.test_batch])

@@ -15,15 +15,20 @@ import pytest
 
 SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 
-# The documented public surface (ISSUE 4 satellite): the valuation API,
-# the streaming pipelines, and the sharding helpers.
+# The documented public surface (ISSUE 4 satellite; extended by ISSUE 5
+# with the method-generic streaming engine modules): the valuation API,
+# the streaming pipelines/kernels, and the sharding helpers.
 PUBLIC_MODULES = [
     "core/methods.py",
     "core/session.py",
     "core/results.py",
     "core/sti_knn.py",
+    "core/knn_shapley.py",
+    "core/wknn.py",
+    "core/loo.py",
     "kernels/sti_pipeline.py",
     "kernels/sti_fill.py",
+    "kernels/stream_kernels.py",
     "kernels/autotune.py",
     "distributed/sharding.py",
 ]

@@ -1,0 +1,341 @@
+"""Method-generic streaming engine (ISSUE 5): streamed == eager == oracle
+parity for the point-value methods, the exact O(t n^2) weighted-KNN fast
+path vs the 2^n oracle, vector-accumulator sessions (checkpoint/restore,
+sharded under 8 forced host devices), and the method-aware ENGINES table.
+
+Multi-device cases run in SUBPROCESSES (jax locks the device count at first
+init), mirroring tests/test_sharded_engine.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro  # noqa: F401  (package import registers methods + kernels)
+from repro.core import (
+    ENGINES,
+    ValuationSession,
+    get_method,
+    knn_shapley_values,
+    loo_values,
+    valid_engines,
+    wknn_shapley_values,
+)
+from repro.core.sti_baseline import (
+    brute_force_shapley,
+    brute_force_wknn_shapley,
+    knn_utility_table,
+    sorted_orders,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+EAGER_FNS = {
+    "knn_shapley": knn_shapley_values,
+    "wknn": wknn_shapley_values,
+    "loo": loo_values,
+}
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=str(REPO / "src"))
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}"
+    return p.stdout
+
+
+def _rand_problem(rng, n, t, dim=3, classes=2):
+    return (
+        jnp.asarray(rng.normal(size=(n, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, n).astype(np.int32)),
+        jnp.asarray(rng.normal(size=(t, dim)).astype(np.float32)),
+        jnp.asarray(rng.integers(0, classes, t).astype(np.int32)),
+    )
+
+
+def _brute_force_loo(x, y, xt, yt, k):
+    """LOO oracle from the 2^n utility table: v(N) - v(N \\ {i})."""
+    n, t = x.shape[0], xt.shape[0]
+    orders = sorted_orders(np.asarray(x), np.asarray(xt))
+    full = (1 << n) - 1
+    out = np.zeros(n)
+    for p in range(t):
+        table = knn_utility_table(
+            orders[p], np.asarray(y == int(yt[p])), k)
+        for i in range(n):
+            out[i] += table[full] - table[full & ~(1 << i)]
+    return out / t
+
+
+# ------------------------------------------------- streamed == eager parity
+@pytest.mark.parametrize("n,t", [(8, 5), (64, 37)])  # ragged t, both sizes
+@pytest.mark.parametrize("k", [1, 5])
+@pytest.mark.parametrize("name", ["knn_shapley", "wknn", "loo"])
+def test_streamed_matches_eager(name, n, t, k):
+    """Acceptance: get_method(...)(engine='streamed') == the eager public
+    function for every point method, at n in {8, 64}, ragged t, k in
+    {1, 5} (the streamed path pads trailing batches with a zero mask)."""
+    rng = np.random.default_rng(n * 13 + t * 5 + k)
+    x, y, xt, yt = _rand_problem(rng, n, t)
+    eager = np.asarray(EAGER_FNS[name](x, y, xt, yt, k))
+    r = get_method(name)(x, y, xt, yt, k=k, engine="streamed",
+                         test_batch=16, distance="xla")
+    assert r.meta["engine"] == "streamed" and r.meta["streamed"] is True
+    np.testing.assert_allclose(
+        np.asarray(r.point_values), eager, atol=1e-6)
+    # eager engine is the same public function through the registry
+    re = get_method(name)(x, y, xt, yt, k=k, engine="eager")
+    np.testing.assert_allclose(
+        np.asarray(re.point_values), eager, atol=1e-6)
+    assert re.meta["streamed"] is False
+
+
+@pytest.mark.parametrize("k", [1, 5])
+@pytest.mark.parametrize("name", ["knn_shapley", "wknn", "loo"])
+def test_streamed_matches_bruteforce_oracle(name, k):
+    """Streamed values == the O(2^n) subset-enumeration oracle at n=8."""
+    rng = np.random.default_rng(41 + k)
+    x, y, xt, yt = _rand_problem(rng, 8, 5, dim=2)
+    r = get_method(name)(x, y, xt, yt, k=k, engine="streamed",
+                         test_batch=3, distance="xla")
+    if name == "loo":
+        want = _brute_force_loo(x, y, xt, yt, k)
+    elif name == "knn_shapley":
+        want = brute_force_shapley(
+            np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), k)
+    else:
+        want = brute_force_wknn_shapley(
+            np.asarray(x), np.asarray(y), np.asarray(xt), np.asarray(yt), k)
+    np.testing.assert_allclose(np.asarray(r.point_values), want, atol=1e-5)
+
+
+# ----------------------------------------------- wknn exact O(t n^2) engine
+@pytest.mark.parametrize("weights", ["rbf", "inverse", "uniform"])
+def test_wknn_default_engine_matches_oracle_n12(weights):
+    """Acceptance: the DEFAULT wknn engine (no engine= given) is the exact
+    streamed recurrence -- no 2^n enumeration -- and matches the registered
+    engine='oracle' brute force to <= 1e-5 at n <= 12."""
+    rng = np.random.default_rng(len(weights))
+    x, y, xt, yt = _rand_problem(rng, 12, 4, dim=2)
+    fast = get_method("wknn")(x, y, xt, yt, k=5, weights=weights)
+    assert fast.meta["engine"] == "streamed"  # default = first ENGINES entry
+    oracle = get_method("wknn")(x, y, xt, yt, k=5, weights=weights,
+                                engine="oracle")
+    assert oracle.meta["engine"] == "oracle"
+    np.testing.assert_allclose(
+        np.asarray(fast.point_values), np.asarray(oracle.point_values),
+        atol=1e-5)
+
+
+def test_oracle_engine_guarded_against_large_n():
+    """engine='oracle' enumerates 2^n subsets: refused beyond n=16."""
+    rng = np.random.default_rng(7)
+    x, y, xt, yt = _rand_problem(rng, 32, 3)
+    with pytest.raises(ValueError, match="2\\^n"):
+        get_method("wknn")(x, y, xt, yt, k=3, engine="oracle")
+
+
+def test_explicit_options_never_silently_dropped():
+    """Execution options are forwarded to engines that honor them and
+    REJECTED (not ignored) by engines that cannot -- distance= reaches the
+    eager path, oracle refuses batching/distance knobs outright."""
+    rng = np.random.default_rng(19)
+    x, y, xt, yt = _rand_problem(rng, 12, 5)
+    base = get_method("knn_shapley")(x, y, xt, yt, k=3, engine="eager")
+    expl = get_method("knn_shapley")(
+        x, y, xt, yt, k=3, engine="eager", distance="xla", test_batch=2)
+    np.testing.assert_allclose(
+        np.asarray(expl.point_values), np.asarray(base.point_values),
+        atol=1e-6)
+    assert expl.meta["distance"] == "xla" and expl.meta["test_batch"] == 2
+    with pytest.raises(ValueError, match="oracle"):
+        get_method("wknn")(x, y, xt, yt, k=3, engine="oracle",
+                           distance="xla")
+    with pytest.raises(ValueError, match="oracle"):
+        get_method("knn_shapley")(x, y, xt, yt, k=3, engine="oracle",
+                                  test_batch=4)
+
+
+def test_stream_point_values_rejects_interaction_methods():
+    """The vector driver refuses interaction methods up front instead of
+    crashing after the full computation."""
+    from repro.kernels.sti_pipeline import stream_point_values
+
+    rng = np.random.default_rng(29)
+    x, y, xt, yt = _rand_problem(rng, 8, 3)
+    with pytest.raises(ValueError, match="interaction"):
+        stream_point_values("sti", x, y, xt, yt, 3)
+
+
+# ------------------------------------------------ vector-accumulator session
+def test_vector_session_checkpoint_restore_matches_eager(tmp_path):
+    """Acceptance: ValuationSession(mode='knn_shapley') streaming +
+    mid-stream checkpoint/restore yields values identical to the eager
+    path."""
+    rng = np.random.default_rng(17)
+    n, t, k = 24, 21, 3
+    x, y, xt, yt = _rand_problem(rng, n, t, classes=3)
+    eager = np.asarray(knn_shapley_values(x, y, xt, yt, k, test_batch=8))
+    sess = ValuationSession(x, y, k=k, mode="knn_shapley", test_batch=8,
+                            distance="xla")
+    for lo, hi in ((0, 5), (5, 11)):
+        sess.update(xt[lo:hi], yt[lo:hi])
+    ck = sess.checkpoint(tmp_path / "mid")
+    restored = ValuationSession.restore(ck, x, y)
+    assert restored.mode == "knn_shapley" and restored.t_seen == 11
+    restored.update(xt[11:], yt[11:])
+    res = restored.finalize()
+    assert res.method == "knn_shapley" and res.phi is None
+    assert res.meta["engine"] == "session" and res.meta["t"] == t
+    np.testing.assert_allclose(
+        np.asarray(res.point_values), eager, atol=1e-6)
+
+
+def test_wknn_session_restores_method_opts(tmp_path):
+    """A wknn session checkpoint carries the weight kind: the restored
+    session streams the SAME weighted utility without re-passing opts."""
+    rng = np.random.default_rng(23)
+    x, y, xt, yt = _rand_problem(rng, 16, 11)
+    want = np.asarray(
+        wknn_shapley_values(x, y, xt, yt, 3, weights="inverse",
+                            test_batch=4))
+    sess = ValuationSession(x, y, k=3, mode="wknn", test_batch=4,
+                            method_opts={"weights": "inverse"},
+                            distance="xla")
+    sess.update(xt[:6], yt[:6])
+    ck = sess.checkpoint(tmp_path / "w")
+    restored = ValuationSession.restore(ck, x, y)
+    assert restored.method_opts == {"weights": "inverse"}
+    restored.update(xt[6:], yt[6:])
+    np.testing.assert_allclose(
+        np.asarray(restored.finalize().point_values), want, atol=1e-6)
+
+
+def test_vector_session_sharded_8dev_checkpoint_restore():
+    """Acceptance (sharded): a vector-accumulator session under 8 forced
+    host devices shards the (n,) state into (n/8,) rows, survives a
+    mid-stream checkpoint/restore, and matches the eager path."""
+    run_py("""
+    import tempfile, os
+    import numpy as np, jax, jax.numpy as jnp
+    import repro
+    from repro.core import knn_shapley_values, wknn_shapley_values
+    from repro.core.session import ShardedValuationSession
+
+    assert jax.device_count() == 8
+    rng = np.random.default_rng(31)
+    n, t, k = 64, 45, 5     # 45 ragged over devices * tb
+    x = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 3, n).astype(np.int32))
+    xt = jnp.asarray(rng.normal(size=(t, 3)).astype(np.float32))
+    yt = jnp.asarray(rng.integers(0, 3, t).astype(np.int32))
+
+    for mode, eager in (
+        ("knn_shapley", knn_shapley_values(x, y, xt, yt, k)),
+        ("wknn", wknn_shapley_values(x, y, xt, yt, k)),
+    ):
+        sess = ShardedValuationSession(x, y, k=k, mode=mode, test_batch=16,
+                                       distance="xla")
+        assert sess.shards == 8 and sess.test_batch % 8 == 0
+        sess.update(xt[:20], yt[:20])
+        vec = sess._acc
+        assert vec.sharding.shard_shape(vec.shape) == (n // 8,)
+        assert len(vec.sharding.device_set) == 8
+        with tempfile.TemporaryDirectory() as td:
+            ck = sess.checkpoint(os.path.join(td, "mid"))
+            restored = ShardedValuationSession.restore(ck, x, y)
+            assert restored.shards == 8 and restored.t_seen == 20
+            restored.update(xt[20:], yt[20:])
+            res = restored.finalize()
+        assert res.meta["engine"] == "sharded" and res.meta["shards"] == 8
+        assert res.meta["t"] == t
+        np.testing.assert_allclose(
+            np.asarray(res.point_values), np.asarray(eager), atol=1e-5)
+        print("ok", mode,
+              float(np.abs(np.asarray(res.point_values)
+                           - np.asarray(eager)).max()))
+    """)
+
+
+def test_sharded_point_engine_single_device_fallback():
+    """shards=1 falls back to the single-device vector step (same code path
+    everywhere), still reporting sharded provenance."""
+    rng = np.random.default_rng(5)
+    x, y, xt, yt = _rand_problem(rng, 18, 9)
+    r = get_method("loo")(x, y, xt, yt, k=3, engine="sharded", shards=1,
+                          distance="xla")
+    assert r.meta["engine"] == "sharded" and r.meta["shards"] == 1
+    np.testing.assert_allclose(
+        np.asarray(r.point_values),
+        np.asarray(loo_values(x, y, xt, yt, 3)), atol=1e-6)
+
+
+# --------------------------------------------------------------- ENGINES
+def test_engines_table_covers_builtin_methods():
+    assert ENGINES["sti"] == ("fused", "scan", "distributed", "sharded")
+    assert ENGINES["wknn"][0] == "streamed"       # default is the fast path
+    assert "oracle" in ENGINES["wknn"] and "oracle" in ENGINES["knn_shapley"]
+    assert "oracle" not in ENGINES["loo"]
+    assert valid_engines("wknn") == ENGINES["wknn"]
+    assert valid_engines("not-a-method") is None
+
+
+def test_interaction_engines_deprecation_alias():
+    """INTERACTION_ENGINES still resolves (module __getattr__) but warns."""
+    import repro.core.methods as m
+
+    with pytest.warns(DeprecationWarning, match="ENGINES"):
+        legacy = m.INTERACTION_ENGINES
+    assert legacy == ENGINES["sti"]
+
+
+def test_engine_errors_name_per_method_engines():
+    rng = np.random.default_rng(3)
+    x, y, xt, yt = _rand_problem(rng, 8, 2)
+    with pytest.raises(ValueError, match="streamed"):
+        get_method("wknn")(x, y, xt, yt, k=3, engine="warp")
+    with pytest.raises(ValueError, match="fused"):
+        get_method("sti")(x, y, xt, yt, k=3, engine="oracle")
+    with pytest.raises(ValueError, match="oracle"):
+        get_method("loo")(x, y, xt, yt, k=3, engine="oracle")
+    with pytest.raises(ValueError, match="sharded"):
+        get_method("wknn")(x, y, xt, yt, k=3, engine="streamed", shards=4)
+    # unknown-method error names the engines per method
+    with pytest.raises(ValueError, match="engines per method"):
+        get_method("nope")
+
+
+# --------------------------------------------------------- meta uniformity
+def test_result_meta_uniform_engine_fill_streamed():
+    """Satellite fix: every method's result meta (and summary) carries
+    engine / resolved_fill / streamed -- point methods included."""
+    rng = np.random.default_rng(11)
+    x, y, xt, yt = _rand_problem(rng, 16, 6)
+    sti = get_method("sti")(x, y, xt, yt, k=3, fill="chunked",
+                            distance="xla")
+    assert sti.meta["engine"] == "fused" and sti.meta["streamed"] is True
+    assert sti.meta["resolved_fill"] == "chunked"
+    loo = get_method("loo")(x, y, xt, yt, k=3, distance="xla")
+    assert loo.meta["engine"] == "streamed"
+    assert loo.meta["streamed"] is True
+    assert loo.meta["resolved_fill"] is None
+    for r in (sti, loo):
+        s = r.summary()
+        assert {"engine", "resolved_fill", "streamed"} <= set(s)
+    # a result whose meta predates the uniform keys still summarizes them
+    from repro.core import ValuationResult
+
+    bare = ValuationResult(method="x", point_values=jnp.zeros(4))
+    s = bare.summary()
+    assert s["engine"] is None and s["streamed"] is False
+    assert s["resolved_fill"] is None

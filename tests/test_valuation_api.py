@@ -183,7 +183,7 @@ def test_session_single_point_and_validation():
     sess.update(xt[0], yt[0])  # 1-D single test point is accepted
     assert sess.t_seen == 1
     with pytest.raises(ValueError, match="unknown mode"):
-        ValuationSession(x, y, mode="loo")
+        ValuationSession(x, y, mode="not-a-streaming-method")
 
 
 def test_session_checkpoint_restore(tmp_path):
