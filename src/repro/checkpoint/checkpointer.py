@@ -1,12 +1,20 @@
 """Sharded, atomic, async checkpointing (numpy-backed, no orbax).
 
 Layout:  <dir>/step_<N>/
-            MANIFEST.json          {step, leaf paths, shapes, dtypes, done}
+            MANIFEST.json          {step, leaf paths, shapes, dtypes,
+                                    sha256 per leaf, done}
             <leaf-hash>.npy        one file per pytree leaf (host-gathered
                                    shard or full array)
 Atomicity: written to step_<N>.tmp, fsync'd, then renamed -- a crashed
 write can never be mistaken for a valid checkpoint (restore picks the
 newest directory whose MANIFEST has done=true).
+
+Integrity: every leaf file's sha256 is recorded in the MANIFEST and
+verified on restore. A corrupted leaf (bit rot, torn write, injected
+corruption) makes `restore(step=None)` SKIP that step directory and fall
+back to the previous done=true checkpoint instead of loading garbage;
+restoring an explicitly requested corrupt step raises
+`CheckpointCorruptionError`.
 
 Async: `save_async` snapshots to host memory synchronously (cheap vs HBM
 -> disk) and writes on a daemon thread, overlapping with the next step --
@@ -31,7 +39,11 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointCorruptionError"]
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """An explicitly requested checkpoint step failed sha256 verification."""
 
 
 def _leaf_name(path) -> str:
@@ -40,7 +52,18 @@ def _leaf_name(path) -> str:
     return f"{h}"
 
 
+def _file_sha256(path: Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 class Checkpointer:
+    """Atomic, checksummed, optionally async pytree checkpoint store
+    (see module docstring for the on-disk layout and guarantees)."""
+
     def __init__(self, directory: str | Path, keep: int = 3):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
@@ -49,10 +72,13 @@ class Checkpointer:
 
     # ----------------------------------------------------------- save
     def save(self, step: int, tree: Any):
+        """Synchronously write `tree` as checkpoint `step` (atomic)."""
         self.wait()
         self._write(step, self._snapshot(tree))
 
     def save_async(self, step: int, tree: Any):
+        """Snapshot `tree` to host memory NOW, write on a daemon thread
+        (overlaps disk I/O with the next step; `wait()` joins)."""
         self.wait()
         snap = self._snapshot(tree)  # host copy BEFORE returning
         self._thread = threading.Thread(
@@ -60,6 +86,7 @@ class Checkpointer:
         self._thread.start()
 
     def wait(self):
+        """Join any in-flight `save_async` write (no-op when idle)."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -84,6 +111,7 @@ class Checkpointer:
                 "file": f"{name}.npy",
                 "shape": list(arr.shape),
                 "dtype": str(arr.dtype),
+                "sha256": _file_sha256(tmp / f"{name}.npy"),
             })
         manifest["done"] = True
         mf = tmp / "MANIFEST.json"
@@ -103,6 +131,7 @@ class Checkpointer:
 
     # -------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
+        """Sorted step numbers of every done=true checkpoint directory."""
         out = []
         for p in self.dir.glob("step_*"):
             if p.suffix == ".tmp" or not (p / "MANIFEST.json").exists():
@@ -116,17 +145,58 @@ class Checkpointer:
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
+        """Newest done=true step number, or None when the store is empty."""
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def verify_step(self, step: int) -> bool:
+        """True iff every leaf file of `step` matches its MANIFEST sha256.
+
+        Leaves written before checksums existed (no "sha256" entry) are
+        trusted; a missing file or digest mismatch fails the whole step.
+        """
+        d = self.dir / f"step_{step:08d}"
+        try:
+            manifest = json.loads((d / "MANIFEST.json").read_text())
+        except (OSError, json.JSONDecodeError):
+            return False
+        for e in manifest.get("leaves", []):
+            want = e.get("sha256")
+            if want is None:
+                continue
+            f = d / e["file"]
+            if not f.exists() or _file_sha256(f) != want:
+                return False
+        return True
+
+    def latest_verified_step(self) -> Optional[int]:
+        """Newest done=true step that passes checksum verification (the
+        fallback walk: corrupt steps are skipped, never loaded)."""
+        for step in reversed(self.all_steps()):
+            if self.verify_step(step):
+                return step
+        return None
 
     def restore(self, tree_like: Any, step: Optional[int] = None,
                 shardings: Any = None) -> tuple[Any, int]:
         """Restore into the structure of `tree_like`. If `shardings` is
         given (pytree of NamedSharding), leaves are device_put with them --
-        this is the elastic-restart path (new mesh, same logical tree)."""
-        step = step if step is not None else self.latest_step()
+        this is the elastic-restart path (new mesh, same logical tree).
+
+        With `step=None` the newest checkpoint whose leaf checksums verify
+        is used -- a corrupted step directory is skipped in favour of the
+        previous done=true one. An explicitly requested `step` that fails
+        verification raises `CheckpointCorruptionError`.
+        """
         if step is None:
-            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+            step = self.latest_verified_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no (uncorrupted) checkpoint in {self.dir}")
+        elif not self.verify_step(step):
+            raise CheckpointCorruptionError(
+                f"checkpoint step {step} in {self.dir} failed sha256 "
+                f"verification")
         d = self.dir / f"step_{step:08d}"
         manifest = json.loads((d / "MANIFEST.json").read_text())
         by_key = {e["key"]: e for e in manifest["leaves"]}

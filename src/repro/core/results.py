@@ -195,3 +195,10 @@ class ValuationResult:
     def replace(self, **kw) -> "ValuationResult":
         """Functional update: a copy with the given fields replaced."""
         return dataclasses.replace(self, **kw)
+
+    def with_meta(self, **updates) -> "ValuationResult":
+        """A copy with `updates` merged into `meta` (the original is
+        unchanged). Producers layering provenance onto an inner result --
+        e.g. the resilient runtime attaching its retry/rollback story --
+        use this instead of mutating the frozen dataclass."""
+        return self.replace(meta={**self.meta, **updates})

@@ -41,6 +41,7 @@ usable).
 from __future__ import annotations
 
 import json
+import os
 from pathlib import Path
 from typing import Callable, Optional
 
@@ -194,6 +195,12 @@ class ValuationSession:
         ("acc"/"diag" for interaction modes, "vec" for point-value modes;
         sharded sessions gather their shards first), so a checkpoint
         restores under any device count.
+
+        The write is ATOMIC: bytes go to a `.tmp` sibling which is fsync'd
+        and then renamed over the final path, so a preemption mid-write can
+        never leave a truncated `.npz` that `restore()` half-loads -- the
+        previous checkpoint (if any) stays intact until the new one is
+        fully on disk.
         """
         base = Path(path)
         if base.suffix == ".npz":
@@ -210,9 +217,17 @@ class ValuationSession:
             for name, a in zip(self._spec.names, self._gathered_state())
         }
         out = base.with_suffix(".npz")
-        np.savez_compressed(
-            out, config=np.asarray(json.dumps(cfg)), **arrays
-        )
+        tmp = base.with_suffix(".npz.tmp")
+        try:
+            with open(tmp, "wb") as f:
+                np.savez_compressed(
+                    f, config=np.asarray(json.dumps(cfg)), **arrays
+                )
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, out)
+        finally:
+            tmp.unlink(missing_ok=True)
         return out
 
     @classmethod

@@ -1,0 +1,186 @@
+"""Deterministic fault injection for the resilient valuation runtime.
+
+Nothing in a fault-tolerance layer can be trusted until a failure has been
+driven through it, and real preemptions/device losses cannot be scheduled
+in CI. This module provides the failure modes as INJECTABLE, seeded,
+single-host-testable hooks that `repro.core.resilient.
+ResilientValuationSession` calls at fixed points of its fold loop:
+
+  * ``kind="device"``       -- `before_step` raises `InjectedDeviceFailure`
+                               (the exception path a lost accelerator or a
+                               preempted worker surfaces through jax);
+  * ``kind="deadline"``     -- `before_step` stalls for `delay_s` seconds,
+                               driving the step past a `StepGuard` deadline
+                               (straggler simulation);
+  * ``kind="nan"``          -- `poison_state` overwrites one accumulator
+                               element with NaN after the fold (silent
+                               numeric corruption, e.g. a bad collective);
+  * ``kind="ckpt_corrupt"`` -- `after_checkpoint` flips bytes inside one
+                               leaf file of the newest on-disk checkpoint
+                               (torn write / bit rot), which the
+                               Checkpointer's sha256 verification must
+                               catch on restore.
+
+Faults fire at an exact batch sequence number (`at_seq`) for an exact
+number of attempts (`times`), so every drill is reproducible; randomness
+(WHICH batch to kill in a sweep, WHICH byte to flip) lives in seeded
+helpers, never in hidden global state. `FaultInjector.events` records every
+firing for test assertions.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Iterable, Optional
+
+import numpy as np
+
+__all__ = [
+    "Fault",
+    "FaultInjector",
+    "InjectedFault",
+    "InjectedDeviceFailure",
+    "corrupt_checkpoint_leaf",
+]
+
+
+class InjectedFault(RuntimeError):
+    """Base class for failures raised by the injection harness."""
+
+
+class InjectedDeviceFailure(InjectedFault):
+    """Simulated device loss / worker preemption inside a step."""
+
+
+@dataclass
+class Fault:
+    """One scheduled failure (see module docstring for the kinds).
+
+    `at_seq` is the batch sequence number the fault arms at; `times` is how
+    many consecutive step ATTEMPTS it fires for ("device"/"deadline" --
+    `times` larger than the guard's retry budget forces guard exhaustion,
+    which is the kill / degradation trigger), and `delay_s` is the stall
+    injected by "deadline". "nan" and "ckpt_corrupt" fire once; for
+    "ckpt_corrupt" `at_seq` means "the first checkpoint written at or after
+    this sequence number". `seed` picks the poisoned element / flipped byte.
+    """
+
+    kind: str                 # "device" | "deadline" | "nan" | "ckpt_corrupt"
+    at_seq: int
+    times: int = 1
+    delay_s: float = 0.0
+    seed: int = 0
+    _remaining: int = field(init=False, repr=False)
+
+    def __post_init__(self):
+        if self.kind not in ("device", "deadline", "nan", "ckpt_corrupt"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        self._remaining = int(self.times)
+
+
+class FaultInjector:
+    """Deterministic schedule of `Fault`s, consumed by the resilient
+    session's hooks; `events` is the audit log of every firing."""
+
+    def __init__(self, faults: Iterable[Fault] = (),
+                 sleep_fn=time.sleep):
+        self.faults = list(faults)
+        self.events: list[dict] = []
+        self._sleep = sleep_fn
+
+    def _fire(self, kind: str, seq: int, **extra) -> None:
+        self.events.append({"kind": kind, "seq": int(seq), **extra})
+
+    def fired(self, kind: Optional[str] = None) -> list[dict]:
+        """Events recorded so far, optionally filtered by fault kind."""
+        if kind is None:
+            return list(self.events)
+        return [e for e in self.events if e["kind"] == kind]
+
+    # ------------------------------------------------------------- hooks
+    def before_step(self, seq: int) -> None:
+        """Called at the start of every step ATTEMPT (including retries):
+        raises for an armed "device" fault, stalls for "deadline"."""
+        for f in self.faults:
+            if f.at_seq != seq or f._remaining <= 0:
+                continue
+            if f.kind == "device":
+                f._remaining -= 1
+                self._fire("device", seq, remaining=f._remaining)
+                raise InjectedDeviceFailure(
+                    f"injected device failure at batch seq {seq}")
+            if f.kind == "deadline":
+                f._remaining -= 1
+                self._fire("deadline", seq, delay_s=f.delay_s)
+                self._sleep(f.delay_s)
+
+    def poison_state(self, seq: int, state: tuple) -> tuple:
+        """Called after a successful fold: returns `state` with one element
+        of one array overwritten by NaN when a "nan" fault is armed at
+        `seq` (seeded element choice), else `state` unchanged."""
+        import jax.numpy as jnp
+
+        for f in self.faults:
+            if f.kind != "nan" or f.at_seq != seq or f._remaining <= 0:
+                continue
+            f._remaining -= 1
+            rng = np.random.default_rng(f.seed)
+            i = int(rng.integers(len(state)))
+            arr = state[i]
+            flat_idx = int(rng.integers(arr.size))
+            idx = np.unravel_index(flat_idx, arr.shape)
+            poisoned = arr.at[idx].set(jnp.nan)
+            self._fire("nan", seq, array=i, index=[int(j) for j in idx])
+            return state[:i] + (poisoned,) + state[i + 1:]
+        return state
+
+    def after_checkpoint(self, seq: int, checkpointer) -> None:
+        """Called after a checkpoint save has been issued: corrupts one leaf
+        of the newest on-disk step when a "ckpt_corrupt" fault is armed at
+        or before `seq` (waits for the async write first, so the corruption
+        lands on complete bytes the way bit rot / a torn write would)."""
+        for f in self.faults:
+            if f.kind != "ckpt_corrupt" or seq < f.at_seq or f._remaining <= 0:
+                continue
+            f._remaining -= 1
+            checkpointer.wait()
+            step = checkpointer.latest_step()
+            if step is None:  # nothing on disk yet; fault stays spent
+                self._fire("ckpt_corrupt", seq, step=None)
+                return
+            info = corrupt_checkpoint_leaf(
+                checkpointer.dir, step, seed=f.seed)
+            self._fire("ckpt_corrupt", seq, step=step, **info)
+
+
+def corrupt_checkpoint_leaf(ckpt_dir, step: Optional[int] = None,
+                            seed: int = 0) -> dict:
+    """Flip one byte in one `.npy` leaf of checkpoint `step` (default: the
+    newest step directory) -- the seeded, reproducible stand-in for bit rot
+    or a torn write. Returns {"file": name, "offset": byte} for logging.
+    The MANIFEST sha256 of that leaf no longer matches, so restore must
+    skip the directory."""
+    d = Path(ckpt_dir)
+    if step is None:
+        dirs = sorted(p for p in d.glob("step_*") if p.is_dir()
+                      and p.suffix != ".tmp")
+        if not dirs:
+            raise FileNotFoundError(f"no checkpoint directories in {d}")
+        target = dirs[-1]
+    else:
+        target = d / f"step_{step:08d}"
+    leaves = sorted(target.glob("*.npy"))
+    if not leaves:
+        raise FileNotFoundError(f"no leaf files in {target}")
+    rng = np.random.default_rng(seed)
+    leaf = leaves[int(rng.integers(len(leaves)))]
+    data = bytearray(leaf.read_bytes())
+    # flip a byte in the payload half so the npy header stays parseable --
+    # the corruption must be caught by the CHECKSUM, not by np.load crashing
+    offset = len(data) // 2 + int(rng.integers(max(len(data) // 4, 1)))
+    offset = min(offset, len(data) - 1)
+    data[offset] ^= 0xFF
+    leaf.write_bytes(bytes(data))
+    return {"file": leaf.name, "offset": offset}

@@ -4,16 +4,26 @@ On a real cluster the failure signal comes from the coordinator
 (jax.distributed heartbeats); here the machinery is driven by injectable
 hooks so it is fully testable single-host:
 
-  * StepGuard      -- deadline + retry around a train step (straggler
+  * StepGuard      -- deadline + retry around a step (straggler
                       mitigation: a step exceeding `deadline_s` is retried
                       on refreshed data; persistent stragglers trigger a
-                      checkpoint-restore cycle).
+                      checkpoint-restore cycle). Retries are spaced by
+                      exponential backoff with DETERMINISTIC seeded jitter,
+                      so a fleet of preempted workers does not thunder back
+                      in lockstep yet every run is reproducible.
   * ElasticPlan    -- given a device set, picks the largest (data, model)
                       mesh consistent with the TP degree and returns the
                       re-sharding plan; combined with Checkpointer.restore
                       (shardings=new) this is the elastic-restart path.
   * HealthLog      -- per-step wall-time ring buffer; flags stragglers as
-                      steps > mean + k*std (used by the trainer loop).
+                      steps > mean + k*std over the PRECEDING window (the
+                      sample under judgement never contaminates its own
+                      baseline; it joins the window only after the verdict).
+
+`repro.core.resilient.ResilientValuationSession` drives the streaming
+valuation engine through StepGuard + HealthLog; `repro.distributed.
+fault_injection` provides the deterministic failure hooks that prove the
+whole path works single-host.
 """
 
 from __future__ import annotations
@@ -29,31 +39,104 @@ __all__ = ["StepGuard", "ElasticPlan", "HealthLog", "plan_mesh"]
 
 
 class HealthLog:
-    def __init__(self, window: int = 50, k_sigma: float = 3.0):
-        self.window = window
-        self.k = k_sigma
+    """Per-step wall-time window with mean + k*sigma straggler flagging.
+
+    Contract: a sample `dt` is judged against the statistics of the
+    PRECEDING `window` samples only -- it is appended to the window after
+    the outlier decision, so a genuine straggler cannot raise the mean it
+    is compared against (and a burst of stragglers keeps being flagged
+    instead of normalizing itself). The first `min_history` samples are
+    never flagged (no stable baseline yet). Storage is bounded at `window`
+    samples; `total` and `straggler_steps` survive the trimming so a
+    long-running session can report them in its result metadata.
+    """
+
+    def __init__(self, window: int = 50, k_sigma: float = 3.0,
+                 min_history: int = 8):
+        self.window = int(window)
+        self.k = float(k_sigma)
+        self.min_history = int(min_history)
         self.times: list[float] = []
+        self.total = 0
+        self.straggler_steps: list[int] = []
 
     def record(self, dt: float) -> bool:
-        """Record a step time; True if this step is a straggler outlier."""
-        hist = self.times[-self.window:]
+        """Record a step time; True if this step is a straggler outlier.
+
+        The decision compares `dt` against mean + k*max(std, 0.05*mean) of
+        the current window, which does NOT yet contain `dt` (see class
+        docstring); only after the verdict is the sample folded in.
+        """
+        hist = self.times
+        is_straggler = False
+        if len(hist) >= self.min_history:
+            mu, sd = float(np.mean(hist)), float(np.std(hist))
+            is_straggler = dt > mu + self.k * max(sd, 0.05 * mu)
+        if is_straggler:
+            self.straggler_steps.append(self.total)
+        self.total += 1
         self.times.append(dt)
-        if len(hist) < 8:
-            return False
-        mu, sd = float(np.mean(hist)), float(np.std(hist))
-        return dt > mu + self.k * max(sd, 0.05 * mu)
+        if len(self.times) > self.window:
+            del self.times[: len(self.times) - self.window]
+        return is_straggler
+
+    def summary(self) -> dict:
+        """JSON-able digest (step count, straggler count/indices, mean)."""
+        return {
+            "steps": self.total,
+            "stragglers": len(self.straggler_steps),
+            "straggler_steps": list(self.straggler_steps[-16:]),
+            "mean_step_s": float(np.mean(self.times)) if self.times else 0.0,
+        }
 
 
 @dataclass
 class StepGuard:
-    """Runs a step with deadline + bounded retries."""
+    """Runs a step with deadline + bounded retries + exponential backoff.
+
+    Backoff before retry attempt a (a >= 1) sleeps
+    ``backoff_s * backoff_factor**(a-1) * (1 + jitter)`` seconds, where
+    jitter is drawn uniformly from [0, jitter_frac) by a PRNG seeded with
+    `seed` -- deterministic across runs, decorrelated across differently
+    seeded workers. `backoff_s=0` (the default) preserves the original
+    no-sleep behaviour. `sleep_fn` is injectable for tests.
+    """
+
     deadline_s: float = float("inf")
     max_retries: int = 2
     on_retry: Optional[Callable[[int, Exception | str], None]] = None
+    backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 30.0
+    jitter_frac: float = 0.25
+    seed: int = 0
+    sleep_fn: Callable[[float], None] = time.sleep
+    _rng: np.random.Generator = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def backoff_delay(self, attempt: int) -> float:
+        """The (jittered, capped) sleep before retry `attempt` (1-based)."""
+        if self.backoff_s <= 0.0:
+            return 0.0
+        base = self.backoff_s * self.backoff_factor ** max(attempt - 1, 0)
+        jitter = 1.0 + self.jitter_frac * float(self._rng.random())
+        return min(base * jitter, self.backoff_max_s)
 
     def run(self, fn, *args):
+        """Call `fn(*args)`, blocking on the result; returns (out, dt).
+
+        Retries up to `max_retries` times on exception (device failure
+        surfaces here) or deadline overrun, sleeping `backoff_delay` between
+        attempts; raises RuntimeError once the budget is exhausted.
+        """
         err: Exception | str = ""
         for attempt in range(self.max_retries + 1):
+            if attempt > 0:
+                delay = self.backoff_delay(attempt)
+                if delay > 0.0:
+                    self.sleep_fn(delay)
             t0 = time.time()
             try:
                 out = fn(*args)
@@ -71,6 +154,9 @@ class StepGuard:
 
 @dataclass(frozen=True)
 class ElasticPlan:
+    """Re-sharding plan for an elastic restart (mesh shape + axis names +
+    the fraction of devices the plan leaves idle)."""
+
     mesh_shape: tuple
     axis_names: tuple
     lost_fraction: float

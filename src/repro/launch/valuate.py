@@ -11,6 +11,11 @@ computation through a `ValuationSession` in test-batch increments to
 exercise the constant-memory online path -- for EVERY method with a
 streaming kernel (interactions and per-point values alike), and
 `--engine sharded --stream` opens the multi-device sharded session.
+`--resilient` (implies --stream) drives the same fold through the
+fault-tolerant `ResilientValuationSession`: StepGuard retries with
+backoff, periodic atomic checkpoints under `--ckpt-dir` every
+`--ckpt-every` batches, NaN rollback, and -- with a checkpoint already on
+disk -- resume-and-replay with exactly-once fold semantics.
 """
 
 from __future__ import annotations
@@ -63,11 +68,25 @@ def main():
                     help="drive the valuation through a streaming "
                          "ValuationSession instead of one-shot (any method "
                          "with a streaming kernel)")
+    ap.add_argument("--resilient", action="store_true",
+                    help="wrap the streaming session in the fault-tolerant "
+                         "runtime (guarded retries, periodic atomic "
+                         "checkpoints, NaN rollback); implies --stream")
+    ap.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                    help="checkpoint directory for --resilient (default: a "
+                         "fresh temp dir); a directory holding a previous "
+                         "run's checkpoint RESUMES it (replayed batches are "
+                         "skipped exactly-once)")
+    ap.add_argument("--ckpt-every", type=int, default=4,
+                    help="checkpoint cadence in batches for --resilient "
+                         "(0 disables checkpointing and rollback)")
     ap.add_argument("--save", default=None, metavar="PATH",
                     help="persist the ValuationResult to PATH.npz + PATH.json")
     args = ap.parse_args()
     if args.distributed:
         args.engine = "distributed"
+    if args.resilient:
+        args.stream = True
     ve = valid_engines(args.method)
     if args.engine is not None and ve is not None and args.engine not in ve:
         ap.error(f"--engine {args.engine} invalid for --method "
@@ -115,7 +134,26 @@ def main():
             kw["distance"] = "xla"
         if args.method == "wknn":
             kw["method_opts"] = {"weights": args.weights}
-        if args.engine == "sharded":
+        if args.resilient:
+            import tempfile
+
+            from repro.core.resilient import ResilientValuationSession
+
+            ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(
+                prefix="repro-valuate-ckpt-")
+            from repro.checkpoint.checkpointer import Checkpointer
+
+            if Checkpointer(ckpt_dir).latest_step() is not None:
+                sess = ResilientValuationSession.restore(ckpt_dir, x, y)
+                print(f"resuming from {ckpt_dir} at batch "
+                      f"{sess.batches_folded}")
+            else:
+                sess = ResilientValuationSession(
+                    x, y, ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
+                    sharded=args.engine == "sharded",
+                    shards=args.shards if args.engine == "sharded" else None,
+                    **kw)
+        elif args.engine == "sharded":
             sess = ShardedValuationSession(x, y, shards=args.shards, **kw)
         else:
             sess = ValuationSession(x, y, **kw)
@@ -123,6 +161,12 @@ def main():
             sess.update(xt[start:start + args.test_batch],
                         yt[start:start + args.test_batch])
         result = sess.finalize()
+        if args.resilient:
+            res = result.meta["resilience"]
+            print(f"resilience: checkpoints={res['checkpoint_steps']} "
+                  f"retries={res['retries']} rollbacks={res['rollbacks']} "
+                  f"stragglers={res['health']['stragglers']} "
+                  f"(ckpt_dir={ckpt_dir})")
     else:
         result = method(x, y, xt, yt, k=args.k, **opts)
     dt = time.time() - t0

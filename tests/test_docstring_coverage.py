@@ -16,12 +16,14 @@ import pytest
 SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 
 # The documented public surface (ISSUE 4 satellite; extended by ISSUE 5
-# with the method-generic streaming engine modules): the valuation API,
-# the streaming pipelines/kernels, and the sharding helpers.
+# with the method-generic streaming engine modules and by ISSUE 6 with
+# the resilient runtime): the valuation API, the streaming pipelines/
+# kernels, the sharding helpers, and the fault-tolerance layer.
 PUBLIC_MODULES = [
     "core/methods.py",
     "core/session.py",
     "core/results.py",
+    "core/resilient.py",
     "core/sti_knn.py",
     "core/knn_shapley.py",
     "core/wknn.py",
@@ -31,6 +33,9 @@ PUBLIC_MODULES = [
     "kernels/stream_kernels.py",
     "kernels/autotune.py",
     "distributed/sharding.py",
+    "distributed/fault_tolerance.py",
+    "distributed/fault_injection.py",
+    "checkpoint/checkpointer.py",
 ]
 
 MIN_COVERAGE = 0.90

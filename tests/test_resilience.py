@@ -1,0 +1,450 @@
+"""Chaos drills for the resilient session runtime (ISSUE 6).
+
+The acceptance bar: a streaming valuation killed by an injected device
+failure, deadline overrun, checkpoint corruption, or NaN poisoning at any
+batch index must restore and finalize BIT-IDENTICAL to an uninterrupted
+run. Every failure mode is driven through `repro.distributed.
+fault_injection`'s deterministic hooks, so the whole suite is single-host;
+the sharded drill (degradation + restore under a reduced device count)
+runs in a subprocess with 8 forced host CPU devices.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    CheckpointCorruptionError,
+)
+from repro.core.resilient import ResilientValuationSession
+from repro.core.session import ValuationSession
+from repro.distributed.fault_injection import (
+    Fault,
+    FaultInjector,
+    corrupt_checkpoint_leaf,
+)
+from repro.distributed.fault_tolerance import HealthLog, StepGuard
+
+REPO = Path(__file__).resolve().parents[1]
+
+N, T, D, K, TB = 64, 32, 4, 5, 8
+
+
+def _problem():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(N, D)).astype(np.float32)
+    y = rng.integers(0, 2, N).astype(np.int32)
+    xt = rng.normal(size=(T, D)).astype(np.float32)
+    yt = rng.integers(0, 2, T).astype(np.int32)
+    batches = [(xt[i:i + TB], yt[i:i + TB]) for i in range(0, T, TB)]
+    return x, y, batches
+
+
+_BASELINES: dict = {}
+
+
+def _baseline(mode: str) -> np.ndarray:
+    """Uninterrupted plain-session result for `mode` (cached per module)."""
+    if mode not in _BASELINES:
+        x, y, batches = _problem()
+        sess = ValuationSession(x, y, k=K, mode=mode, test_batch=TB)
+        for xb, yb in batches:
+            sess.update(xb, yb)
+        res = sess.finalize()
+        arr = res.phi if res.phi is not None else res.point_values
+        _BASELINES[mode] = np.asarray(arr)
+    return _BASELINES[mode]
+
+
+def _assert_parity(result, mode: str):
+    arr = result.phi if result.phi is not None else result.point_values
+    np.testing.assert_array_equal(np.asarray(arr), _baseline(mode))
+
+
+# ------------------------------------------------------------- StepGuard
+def test_stepguard_backoff_deterministic_and_exponential():
+    sleeps: list[float] = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise RuntimeError("boom")
+        return np.zeros(2)
+
+    g = StepGuard(max_retries=3, backoff_s=0.1, backoff_factor=2.0,
+                  jitter_frac=0.25, seed=7, sleep_fn=sleeps.append)
+    out, dt = g.run(flaky)
+    assert calls["n"] == 4 and len(sleeps) == 3
+    # exponential growth despite jitter (factor 2 > 1.25 max jitter)
+    assert sleeps[0] < sleeps[1] < sleeps[2]
+    assert 0.1 <= sleeps[0] <= 0.125
+    # deterministic: an identically seeded guard sleeps identically
+    sleeps2: list[float] = []
+    g2 = StepGuard(max_retries=3, backoff_s=0.1, backoff_factor=2.0,
+                   jitter_frac=0.25, seed=7, sleep_fn=sleeps2.append)
+    calls["n"] = 0
+    g2.run(flaky)
+    assert sleeps2 == sleeps
+    # a different seed jitters differently
+    g3 = StepGuard(backoff_s=0.1, seed=8)
+    assert g3.backoff_delay(1) != StepGuard(backoff_s=0.1, seed=7).backoff_delay(1)
+
+
+def test_stepguard_default_has_no_backoff():
+    g = StepGuard(max_retries=2)
+    assert g.backoff_delay(1) == 0.0 and g.backoff_delay(2) == 0.0
+
+
+def test_stepguard_exhaustion_raises():
+    g = StepGuard(max_retries=1)
+    with pytest.raises(RuntimeError, match="failed after 1 retries"):
+        g.run(lambda: (_ for _ in ()).throw(ValueError("dead")))
+
+
+# -------------------------------------------------------------- HealthLog
+def test_healthlog_judges_against_preceding_window_only():
+    log = HealthLog(window=50, k_sigma=3.0, min_history=8)
+    for _ in range(8):
+        assert not log.record(1.0)
+    # a 100x outlier is flagged: it is judged against the preceding window
+    # (mean 1.0), NOT against a window it already contaminated
+    assert log.record(100.0)
+    # only after the verdict does it join the window (inflating the mean
+    # for later samples -- a normal step is of course still unflagged)
+    assert log.record(1.0) is False
+    assert log.straggler_steps == [8]
+    assert log.summary()["stragglers"] == 1
+
+
+def test_healthlog_storage_is_bounded():
+    log = HealthLog(window=10)
+    for i in range(500):
+        log.record(1.0)
+    assert len(log.times) == 10
+    assert log.total == 500
+
+
+# ------------------------------------------------------------ Checkpointer
+def test_checkpointer_sha256_fallback_and_explicit_corruption(tmp_path):
+    ck = Checkpointer(tmp_path, keep=5)
+    tree = {"a": np.arange(32, dtype=np.float32), "b": np.ones((4, 4))}
+    ck.save(1, tree)
+    ck.save(2, {"a": tree["a"] * 2, "b": tree["b"] * 2})
+    assert ck.verify_step(1) and ck.verify_step(2)
+    corrupt_checkpoint_leaf(tmp_path, step=2, seed=0)
+    assert not ck.verify_step(2)
+    assert ck.latest_step() == 2                 # done=true, but corrupt
+    assert ck.latest_verified_step() == 1        # checksum walk skips it
+    restored, step = ck.restore(tree)            # falls back, no garbage
+    assert step == 1
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    with pytest.raises(CheckpointCorruptionError):
+        ck.restore(tree, step=2)
+
+
+def test_checkpointer_async_save_checksummed(tmp_path):
+    ck = Checkpointer(tmp_path)
+    ck.save_async(3, {"w": np.full((8,), 7.0)})
+    ck.wait()
+    assert ck.verify_step(3)
+
+
+# ----------------------------------------------------- atomic npz sessions
+def test_session_npz_checkpoint_write_is_atomic(tmp_path, monkeypatch):
+    x, y, batches = _problem()
+    sess = ValuationSession(x, y, k=K, mode="sti", test_batch=TB)
+    sess.update(*batches[0])
+    path = tmp_path / "ck"
+    sess.checkpoint(path)
+    good = (tmp_path / "ck.npz").read_bytes()
+
+    # a crash mid-write must leave the previous checkpoint untouched
+    def exploding_savez(f, **kw):
+        f.write(b"partial garbage")
+        raise OSError("preempted mid-write")
+
+    sess.update(*batches[1])
+    monkeypatch.setattr(np, "savez_compressed", exploding_savez)
+    with pytest.raises(OSError):
+        sess.checkpoint(path)
+    monkeypatch.undo()
+    assert (tmp_path / "ck.npz").read_bytes() == good
+    assert not (tmp_path / "ck.npz.tmp").exists()
+    restored = ValuationSession.restore(path, x, y)
+    assert restored.t_seen == TB  # the intact pre-crash state
+
+
+# ---------------------------------------------------------- kill / resume
+# the acceptance drill: killed at a seeded-random batch index, restored,
+# replayed from the start -> bit-identical to the uninterrupted run
+@pytest.mark.parametrize("mode", ["sti", "knn_shapley", "wknn"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kill_resume_bit_identical(tmp_path, mode, seed):
+    x, y, batches = _problem()
+    kill_at = int(np.random.default_rng(seed).integers(len(batches)))
+    inj = FaultInjector(
+        [Fault("device", at_seq=kill_at, times=10)])  # > retry budget
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode=mode, k=K, test_batch=TB,
+        ckpt_every=1, max_retries=2, backoff_s=0.0, injector=inj)
+    with pytest.raises(RuntimeError):
+        for xb, yb in batches:
+            sess.update(xb, yb)
+    assert len(inj.fired("device")) == 3  # 1 attempt + 2 retries
+    # a real preemption may tear the in-flight async write (the atomic
+    # rename makes that safe: the step is either fully there or absent);
+    # join it here so the folded-count assertion below is deterministic
+    sess._ckpt.wait()
+    try:
+        resumed = ResilientValuationSession.restore(tmp_path, x, y)
+        assert resumed.batches_folded == kill_at
+    except FileNotFoundError:
+        assert kill_at == 0  # killed before the first checkpoint
+        resumed = ResilientValuationSession(
+            x, y, ckpt_dir=tmp_path, mode=mode, k=K, test_batch=TB,
+            ckpt_every=1)
+    for xb, yb in batches:  # replay the WHOLE stream: exactly-once fold
+        resumed.update(xb, yb)
+    result = resumed.finalize()
+    _assert_parity(result, mode)
+    assert result.meta["resilience"]["replayed_skipped"] == kill_at
+
+
+def test_transient_device_failure_retries_in_place(tmp_path):
+    x, y, batches = _problem()
+    inj = FaultInjector([Fault("device", at_seq=1, times=1)])
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="sti", k=K, test_batch=TB,
+        ckpt_every=2, backoff_s=0.0, injector=inj)
+    for xb, yb in batches:
+        sess.update(xb, yb)
+    result = sess.finalize()
+    _assert_parity(result, "sti")
+    assert result.meta["resilience"]["retries"] == 1
+    assert result.meta["resilient"] is True
+
+
+def test_replay_skip_counting(tmp_path):
+    x, y, batches = _problem()
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="loo", k=K, test_batch=TB,
+        ckpt_every=1)
+    for xb, yb in batches[:3]:
+        sess.update(xb, yb)
+    sess.checkpoint()
+    sess._ckpt.wait()
+    resumed = ResilientValuationSession.restore(tmp_path, x, y)
+    assert resumed.batches_folded == 3
+    for xb, yb in batches:
+        resumed.update(xb, yb)
+    res = resumed.finalize().meta["resilience"]
+    assert res["replayed_skipped"] == 3
+
+
+def test_out_of_order_replay_gap_raises(tmp_path):
+    x, y, batches = _problem()
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="sti", k=K, test_batch=TB)
+    sess.update(*batches[0])
+    sess._arrived = 5  # driver lost batches 1..4
+    with pytest.raises(RuntimeError, match="batch gap"):
+        sess.update(*batches[1])
+
+
+# ------------------------------------------------------------ NaN rollback
+@pytest.mark.parametrize("seed", [0, 1])
+def test_nan_poison_rolls_back_bit_identical(tmp_path, seed):
+    x, y, batches = _problem()
+    poison_at = 1 + int(
+        np.random.default_rng(seed).integers(len(batches) - 1))
+    inj = FaultInjector([Fault("nan", at_seq=poison_at, seed=seed)])
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="sti", k=K, test_batch=TB,
+        ckpt_every=1, injector=inj)
+    for xb, yb in batches:
+        sess.update(xb, yb)
+    result = sess.finalize()
+    _assert_parity(result, "sti")
+    res = result.meta["resilience"]
+    assert res["nan_detected"] == 1 and res["rollbacks"] == 1
+
+
+def test_persistent_nan_exhausts_rollback_budget(tmp_path):
+    x, y, batches = _problem()
+    inj = FaultInjector([Fault("nan", at_seq=1, times=100)])
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="sti", k=K, test_batch=TB,
+        ckpt_every=1, max_rollbacks=2, injector=inj)
+    sess.update(*batches[0])
+    with pytest.raises(RuntimeError, match="non-finite state persists"):
+        sess.update(*batches[1])
+
+
+# -------------------------------------------------- checkpoint corruption
+def test_corrupted_checkpoint_restore_falls_back_bit_identical(tmp_path):
+    x, y, batches = _problem()
+    inj = FaultInjector([Fault("ckpt_corrupt", at_seq=3)])
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="sti", k=K, test_batch=TB,
+        ckpt_every=1, injector=inj, async_checkpoint=False)
+    for xb, yb in batches[:3]:
+        sess.update(xb, yb)
+    # the newest step (3) is now corrupt on disk; a restore must fall back
+    # to step 2 instead of loading garbage
+    assert inj.fired("ckpt_corrupt")
+    resumed = ResilientValuationSession.restore(tmp_path, x, y)
+    assert resumed.batches_folded == 2
+    for xb, yb in batches:
+        resumed.update(xb, yb)
+    _assert_parity(resumed.finalize(), "sti")
+
+
+# ------------------------------------------------------ deadline overruns
+def test_deadline_overrun_retries_and_flags(tmp_path):
+    x, y, batches = _problem()
+    inj = FaultInjector([Fault("deadline", at_seq=1, times=1, delay_s=0.4)])
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="knn_shapley", k=K, test_batch=TB,
+        ckpt_every=2, deadline_s=0.25, backoff_s=0.0, injector=inj)
+    for xb, yb in batches:
+        sess.update(xb, yb)
+    result = sess.finalize()
+    _assert_parity(result, "knn_shapley")
+    assert result.meta["resilience"]["retries"] >= 1
+
+
+# --------------------------------------------------------- sharded drills
+def run_py(code: str, devices: int = 8, timeout: int = 900):
+    """Run `code` in a subprocess with forced host devices (the main pytest
+    process must stay single-device; jax locks the count at first init)."""
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=str(REPO / "src"))
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}"
+    return p.stdout
+
+
+def test_sharded_degradation_and_reduced_device_restore(tmp_path):
+    """Repeated sharded-step failure degrades 8 -> fewer devices with the
+    dense checkpoint carrying the state across topologies; a fresh restore
+    under shards=2 replays to the same values."""
+    run_py(f"""
+        import numpy as np, jax
+        from repro.core.session import ValuationSession
+        from repro.core.resilient import ResilientValuationSession
+        from repro.distributed.fault_injection import Fault, FaultInjector
+
+        assert jax.device_count() == 8
+        rng = np.random.default_rng(0)
+        n, t, d, k, tb = {N}, {T}, {D}, {K}, {TB}
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = rng.integers(0, 2, n).astype(np.int32)
+        xt = rng.normal(size=(t, d)).astype(np.float32)
+        yt = rng.integers(0, 2, t).astype(np.int32)
+        batches = [(xt[i:i+tb], yt[i:i+tb]) for i in range(0, t, tb)]
+
+        base = ValuationSession(x, y, k=k, mode="sti", test_batch=tb)
+        for xb, yb in batches: base.update(xb, yb)
+        want = np.asarray(base.finalize().phi)
+
+        kill_at = int(np.random.default_rng(3).integers(1, len(batches)))
+        inj = FaultInjector([Fault("device", at_seq=kill_at, times=4)])
+        s = ResilientValuationSession(
+            x, y, ckpt_dir=r"{tmp_path}", mode="sti", k=k, test_batch=tb,
+            ckpt_every=1, sharded=True, injector=inj, max_retries=2,
+            backoff_s=0.0)
+        assert s.shards == 8, s.shards
+        for xb, yb in batches: s.update(xb, yb)
+        r = s.finalize()
+        res = r.meta["resilience"]
+        assert res["degradations"] and res["degradations"][0]["from"] == 8, res
+        assert res["shards"] < 8
+        err = float(np.abs(np.asarray(r.phi) - want).max())
+        assert err < 1e-5, err
+
+        # restore an OLDER step under a different device count, so the
+        # remaining batches genuinely refold on the 2-device topology
+        s2 = ResilientValuationSession.restore(
+            r"{tmp_path}", x, y, step=2, shards=2)
+        assert s2.shards == 2, s2.shards
+        assert s2.batches_folded == 2
+        for xb, yb in batches: s2.update(xb, yb)
+        r2 = s2.finalize()
+        err2 = float(np.abs(np.asarray(r2.phi) - want).max())
+        assert err2 < 1e-5, err2
+        assert r2.meta["resilience"]["replayed_skipped"] == 2
+        print("ok", res["degradations"], err, err2)
+    """)
+
+
+def test_sharded_vector_mode_kill_resume(tmp_path):
+    """The (n/D,) vector state rides the same runtime: kill a sharded
+    knn_shapley stream, restore single-device, finish to parity."""
+    run_py(f"""
+        import numpy as np, jax
+        from repro.core.session import ValuationSession
+        from repro.core.resilient import ResilientValuationSession
+        from repro.distributed.fault_injection import Fault, FaultInjector
+
+        rng = np.random.default_rng(0)
+        n, t, d, k, tb = {N}, {T}, {D}, {K}, {TB}
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        y = rng.integers(0, 2, n).astype(np.int32)
+        xt = rng.normal(size=(t, d)).astype(np.float32)
+        yt = rng.integers(0, 2, t).astype(np.int32)
+        batches = [(xt[i:i+tb], yt[i:i+tb]) for i in range(0, t, tb)]
+
+        base = ValuationSession(x, y, k=k, mode="knn_shapley", test_batch=tb)
+        for xb, yb in batches: base.update(xb, yb)
+        want = np.asarray(base.finalize().point_values)
+
+        inj = FaultInjector([Fault("device", at_seq=2, times=10)])
+        s = ResilientValuationSession(
+            x, y, ckpt_dir=r"{tmp_path}", mode="knn_shapley", k=k,
+            test_batch=tb, ckpt_every=1, sharded=True, injector=inj,
+            max_retries=1, backoff_s=0.0, min_shards=2)
+        died = False
+        try:
+            for xb, yb in batches: s.update(xb, yb)
+        except RuntimeError:
+            died = True
+        # min_shards=2 blocks full degradation: 8 -> ... -> 2 then dies
+        assert died and s.shards == 2, (died, s.shards)
+
+        s2 = ResilientValuationSession.restore(
+            r"{tmp_path}", x, y, sharded=False, shards=None)
+        assert s2.shards == 1
+        for xb, yb in batches: s2.update(xb, yb)
+        got = np.asarray(s2.finalize().point_values)
+        err = float(np.abs(got - want).max())
+        assert err < 1e-5, err
+        print("ok", err)
+    """)
+
+
+# --------------------------------------------------------------- overhead
+def test_resilient_clean_run_bit_identical_and_cheap(tmp_path):
+    """No faults injected: the wrapper must be a bit-exact no-op on the
+    values and only add guard/checkpoint bookkeeping."""
+    x, y, batches = _problem()
+    sess = ResilientValuationSession(
+        x, y, ckpt_dir=tmp_path, mode="wknn", k=K, test_batch=TB,
+        ckpt_every=2, method_opts={"weights": "rbf"})
+    for xb, yb in batches:
+        sess.update(xb, yb)
+    result = sess.finalize()
+    _assert_parity(result, "wknn")
+    res = result.meta["resilience"]
+    assert res["retries"] == 0 and res["rollbacks"] == 0
+    assert res["checkpoint_steps"] == [2, 4]
+    assert res["health"]["steps"] == len(batches)
