@@ -457,6 +457,32 @@ print(f"RECT,{{nr}},{{tr}},{{us_rect_scan:.1f}},{{us_rect_pal:.1f}},{{err_rect:.
     ]
 
 
+# ------------------------------------------------------------ lint gate:
+# the reprolint CI job's own cost (DESIGN.md Sec. 14) -- the full-tree AST
+# lint plus the abstract-eval contract checks must stay well under a
+# minute or the "fails in seconds" pitch of the gate stops being true
+def bench_lint():
+    import time as _time_mod
+
+    from repro.analysis import lint_tree, load_baseline
+    from repro.analysis.baseline import split_baselined
+    from repro.analysis.contracts import check_contracts
+
+    t0 = _time_mod.perf_counter()
+    findings = lint_tree()
+    us_ast = (_time_mod.perf_counter() - t0) * 1e6
+    new, baselined = split_baselined(findings, load_baseline())
+    t0 = _time_mod.perf_counter()
+    contract = check_contracts()
+    us_contract = (_time_mod.perf_counter() - t0) * 1e6
+    return [
+        ("reprolint_full_tree", us_ast + us_contract,
+         f"ast_us={us_ast:.0f};contracts_us={us_contract:.0f};"
+         f"new={len(new)};baselined={len(baselined)};"
+         f"contract_findings={len(contract)}"),
+    ]
+
+
 BENCHES = {
     "speedup": bench_speedup_vs_bruteforce,
     "complexity": bench_complexity_scaling,
@@ -468,6 +494,7 @@ BENCHES = {
     "structure": bench_interaction_structure,
     "kernels": bench_kernels,
     "sharded": bench_sharded,
+    "lint": bench_lint,
 }
 
 
@@ -499,6 +526,7 @@ def main() -> None:
         "structure": {"method": "sti", "engine": "scan"},
         "kernels": {"method": "sti", "engine": "kernel"},
         "sharded": {"method": "sti", "engine": "sharded"},
+        "lint": {"method": None, "engine": None},
     }
     for nm in names:
         for row in BENCHES[nm]():

@@ -1,0 +1,36 @@
+"""reprolint: JAX/Pallas-aware static analysis for the repro tree.
+
+Two layers guard the invariants the paper's O(t n^2) claim rests on
+(DESIGN.md Sec. 14):
+
+  * **Layer 1 — AST lint** (`repro.analysis.lint` + `repro.analysis.rules`):
+    repo-specific rules over the source tree. Each rule has a stable code
+    (R1xx donation, R2xx retrace hazards, R3xx collective/axis hygiene,
+    R4xx Pallas kernel-call shape checks, R5xx dtype discipline, R6xx
+    import-time compute), a fix-it message, inline suppression
+    (`# reprolint: disable=R501`), and a checked-in baseline
+    (`reprolint_baseline.txt`) for intentional findings.
+  * **Layer 2 — contract checker** (`repro.analysis.contracts`): walks the
+    LIVE fill / rect-fill / accumulate-fill / update-kernel / method
+    registries and validates every entry WITHOUT running compute —
+    `jax.eval_shape` against its `AccumulatorSpec` (state shapes/dtypes
+    in == out), `jax.make_jaxpr` scans for donation-breaking copies and
+    collectives outside `shard_map`, and a retrace sentinel that traces
+    each prepared step across all padded ragged-batch shapes and asserts
+    exactly one jaxpr.
+
+CLI front door: ``python -m repro.launch.lint --strict`` (the CI gate).
+"""
+
+from repro.analysis.findings import Finding
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.lint import lint_source, lint_file, lint_tree
+
+__all__ = [
+    "Finding",
+    "load_baseline",
+    "write_baseline",
+    "lint_source",
+    "lint_file",
+    "lint_tree",
+]

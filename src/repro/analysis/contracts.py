@@ -1,0 +1,384 @@
+"""reprolint Layer 2: abstract-eval contract checker for kernel registries.
+
+Layer 1 (`repro.analysis.lint`) never imports the analyzed code; this
+layer deliberately does — it walks the LIVE registries (square/rect fill,
+update kernels, the ENGINES table) and validates every registered entry
+WITHOUT running any valuation compute, using JAX's abstract machinery:
+
+  * `jax.eval_shape` proves each fill entry's shape/dtype contract
+    (including the Pallas entries: `pallas_call` abstract-evals from
+    `out_shape` without lowering to Mosaic, so this runs on any backend)
+    and that every prepared streaming step maps its `AccumulatorSpec`
+    state to an identically-shaped state (C1xx/C2xx).
+  * `jax.make_jaxpr` scans the traced step for `copy` primitives that
+    break buffer donation and for collectives outside a `shard_map` eqn
+    (C3xx) — the two silent ways the streaming engine's memory/collective
+    budget regresses.
+  * a retrace sentinel traces each prepared step at full / ragged /
+    single-row batch sizes THROUGH `pad_test_batch` and asserts exactly
+    one distinct jaxpr, i.e. the pad-and-mask contract really does give
+    one executable per configuration (C401).
+  * the ENGINES table and the stream-kernel registry are cross-checked
+    (C501): a method advertising a streaming engine must have a kernel,
+    and every kernel must be reachable from the table.
+
+Checks are sized by tiny (n, d, k, tb) defaults — the whole suite traces
+in seconds. Findings reuse `repro.analysis.findings.Finding` with a
+`registry://...` pseudo-path, so the CLI renders both layers uniformly.
+
+    from repro.analysis.contracts import check_contracts
+    findings = check_contracts()      # [] when every contract holds
+"""
+
+from __future__ import annotations
+
+import traceback
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+__all__ = [
+    "check_contracts",
+    "check_fill_registries",
+    "check_step_contracts",
+    "check_step_jaxprs",
+    "check_retrace_sentinel",
+    "check_engine_table",
+]
+
+# jaxpr-level names of the cross-device collectives (what lax.psum /
+# all_gather / psum_scatter / axis_index actually trace to)
+_COLLECTIVE_PRIMS = {
+    "psum", "pmax", "pmin", "ppermute", "all_gather", "all_to_all",
+    "reduce_scatter", "psum_scatter", "axis_index", "pgather",
+}
+
+# fill / distance statics pinned for step tracing: always registered,
+# backend-independent, no autotune cache IO
+_FILL = "chunked"
+_DISTANCE = "xla"
+
+
+def _finding(code: str, where: str, message: str, fixit: str = "") -> Finding:
+    """A contract finding anchored to a registry entry, not a source line."""
+    return Finding(code=code, path=f"registry://{where}", line=0,
+                   message=message, fixit=fixit)
+
+
+def _err(exc: Exception) -> str:
+    """One-line rendering of a trace-time exception for a finding."""
+    return traceback.format_exception_only(type(exc), exc)[-1].strip()
+
+
+def _sds(shape: tuple, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# ----------------------------------------------------------- fill registries
+def _eval_entry(fn: Callable, args: tuple) -> jax.ShapeDtypeStruct:
+    """eval_shape a registry entry with its default static params."""
+    return jax.eval_shape(fn, *args)
+
+
+def check_fill_registries(n: int = 64, tb: int = 8) -> list[Finding]:
+    """C101/C102/C103: every registered square/rect fill entry must map the
+    canonical abstract inputs to the accumulator's (shape, f32) contract.
+
+    Square fills: `fn(g(tb, n), ranks(tb, n)) -> (n, n) f32`; their
+    accumulate forms additionally take (and must preserve) the `acc`
+    operand. Rect fills: `fn(g(tb, n), r_rows(tb, nr), r_cols(tb, n)) ->
+    (nr, n) f32` (nr = a row block strictly smaller than n, so a kernel
+    that confuses the two bases cannot pass by coincidence).
+    """
+    from repro.core.sti_knn import (
+        _ACC_FILL_FNS,
+        _FILL_FNS,
+        _RECT_ACC_FILL_FNS,
+        _RECT_FILL_FNS,
+    )
+
+    nr = n // 2
+    g = _sds((tb, n), jnp.float32)
+    ranks = _sds((tb, n), jnp.int32)
+    r_rows = _sds((tb, nr), jnp.int32)
+    acc_sq = _sds((n, n), jnp.float32)
+    acc_rect = _sds((nr, n), jnp.float32)
+
+    tables = (
+        ("fill", _FILL_FNS, (g, ranks), (n, n), "C101"),
+        ("acc_fill", _ACC_FILL_FNS, (acc_sq, g, ranks), (n, n), "C102"),
+        ("rect_fill", _RECT_FILL_FNS, (g, r_rows, ranks), (nr, n), "C103"),
+        ("rect_acc_fill", _RECT_ACC_FILL_FNS,
+         (acc_rect, g, r_rows, ranks), (nr, n), "C103"),
+    )
+    out: list[Finding] = []
+    for table, fns, args, want, code in tables:
+        for name in sorted(fns):
+            where = f"{table}/{name}"
+            try:
+                res = _eval_entry(fns[name], args)
+            except Exception as exc:  # noqa: BLE001 - report, don't crash
+                out.append(_finding(
+                    code, where,
+                    f"registry entry failed abstract evaluation: "
+                    f"{_err(exc)}",
+                    "the entry must trace with its default static params "
+                    "on any backend",
+                ))
+                continue
+            if tuple(res.shape) != want:
+                out.append(_finding(
+                    code, where,
+                    f"fill returns shape {tuple(res.shape)}, accumulator "
+                    f"contract requires {want}",
+                    "the fill result is added into the accumulator: "
+                    "shapes must match exactly",
+                ))
+            if res.dtype != jnp.float32:
+                out.append(_finding(
+                    code, where,
+                    f"fill returns dtype {res.dtype}, accumulators are "
+                    f"float32",
+                    "accumulate in f32 (cast inputs up, not the result "
+                    "down): the t*n^2 sum loses mass in low precision",
+                ))
+    return out
+
+
+# -------------------------------------------------------- step preparation
+def _batch_avals(tb: int, n: int, d: int) -> tuple:
+    """Abstract (xb, yb, mask, x_train, y_train) for one padded batch."""
+    return (
+        _sds((tb, d), jnp.float32),
+        _sds((tb,), jnp.int32),
+        _sds((tb,), jnp.float32),
+        _sds((n, d), jnp.float32),
+        _sds((n,), jnp.int32),
+    )
+
+
+def _prepared_steps(n: int, d: int, k: int, tb: int,
+                    sharded: bool) -> Iterator[tuple[str, Callable, object, int]]:
+    """Yield `(label, step, spec, tb)` for every registered stream method,
+    prepared single-device or over a 1-device mesh (sharded steps trace the
+    same shard_map/collective structure regardless of device count, so the
+    jaxpr checks don't need real multi-device topology)."""
+    from repro.kernels.stream_kernels import accumulator_spec, stream_methods
+
+    for method in stream_methods():
+        if sharded:
+            from repro.kernels.sti_pipeline import prepare_sharded_stream_step
+
+            step, resolved, _, spec = prepare_sharded_stream_step(
+                method, n, d, k, shards=1, test_batch=tb,
+                fill=_FILL, distance=_DISTANCE,
+            )
+            yield f"sharded_step/{method}", step, spec, resolved["test_batch"]
+        else:
+            from repro.kernels.sti_pipeline import prepare_stream_step
+
+            step, _, spec = prepare_stream_step(
+                method, n, d, k, test_batch=tb,
+                fill=_FILL, distance=_DISTANCE,
+            )
+            yield f"step/{method}", step, spec, tb
+
+
+def check_step_contracts(n: int = 64, d: int = 8, k: int = 4,
+                         tb: int = 8) -> list[Finding]:
+    """C201: every prepared step must map its `AccumulatorSpec` state to an
+    IDENTICALLY shaped/typed state (eval_shape; nothing executes). A state
+    that grows, reshapes, or changes dtype would silently break donation,
+    checkpointing, and the running-mean finalize all at once."""
+    from repro.kernels.stream_kernels import accumulator_spec  # noqa: F401
+
+    out: list[Finding] = []
+    for sharded in (False, True):
+        for label, step, spec, tb_r in _prepared_steps(n, d, k, tb, sharded):
+            state = tuple(_sds(s, jnp.float32) for s in spec.shapes(n))
+            try:
+                res = jax.eval_shape(step, state, *_batch_avals(tb_r, n, d))
+            except Exception as exc:  # noqa: BLE001
+                out.append(_finding(
+                    "C201", label,
+                    f"prepared step failed abstract evaluation: {_err(exc)}",
+                ))
+                continue
+            got = tuple((tuple(a.shape), a.dtype) for a in res)
+            want = tuple((s, jnp.dtype(jnp.float32)) for s in spec.shapes(n))
+            if got != want:
+                out.append(_finding(
+                    "C201", label,
+                    f"state contract broken: in {want} != out {got}",
+                    "a streaming step must return state of exactly the "
+                    "shapes/dtypes it received (AccumulatorSpec.shapes)",
+                ))
+    return out
+
+
+# --------------------------------------------------------------- jaxpr scans
+def _walk_eqns(jaxpr, in_shard_map: bool = False):
+    """Yield `(eqn, in_shard_map)` over a jaxpr and every sub-jaxpr in its
+    eqn params (scan bodies, pjit calls, shard_map bodies, ...)."""
+    for eqn in jaxpr.eqns:
+        yield eqn, in_shard_map
+        inside = in_shard_map or eqn.primitive.name == "shard_map"
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (list, tuple)) else (val,)
+            for sub in vals:
+                inner = getattr(sub, "jaxpr", sub)
+                if hasattr(inner, "eqns"):
+                    yield from _walk_eqns(inner, inside)
+
+
+def check_step_jaxprs(n: int = 64, d: int = 8, k: int = 4,
+                      tb: int = 8) -> list[Finding]:
+    """C301/C302: trace every prepared step and scan the jaxpr.
+
+    C301: a `copy` primitive in the step body defeats buffer donation —
+    the accumulator round-trips through a fresh allocation and peak memory
+    doubles exactly where the streaming engine promises it won't.
+    C302: a collective outside a `shard_map` eqn (or ANY collective in the
+    single-device step) either fails to lower or, worse, resolves against
+    an ambient mesh the engine doesn't control.
+    """
+    out: list[Finding] = []
+    for sharded in (False, True):
+        for label, step, spec, tb_r in _prepared_steps(n, d, k, tb, sharded):
+            state = tuple(_sds(s, jnp.float32) for s in spec.shapes(n))
+            try:
+                closed = jax.make_jaxpr(step)(
+                    state, *_batch_avals(tb_r, n, d)
+                )
+            except Exception as exc:  # noqa: BLE001
+                out.append(_finding(
+                    "C301", label, f"step failed to trace: {_err(exc)}",
+                ))
+                continue
+            for eqn, inside in _walk_eqns(closed.jaxpr):
+                name = eqn.primitive.name
+                if name == "copy":
+                    out.append(_finding(
+                        "C301", label,
+                        "step jaxpr contains a `copy` eqn: the donated "
+                        "accumulator round-trips through a fresh buffer",
+                        "drop the jnp.copy()/device_put inside the step; "
+                        "donation requires the state to flow through "
+                        "unduplicated",
+                    ))
+                elif name in _COLLECTIVE_PRIMS and not inside:
+                    out.append(_finding(
+                        "C302", label,
+                        f"collective `{name}` outside shard_map in the "
+                        f"step jaxpr",
+                        "collectives belong inside the shard_map-mapped "
+                        "local step, where the mesh axis is bound",
+                    ))
+    return out
+
+
+# --------------------------------------------------------- retrace sentinel
+def check_retrace_sentinel(n: int = 64, d: int = 8, k: int = 4,
+                           tb: int = 8) -> list[Finding]:
+    """C401: the pad-and-mask contract must yield ONE jaxpr per prepared
+    step across full, ragged, and single-row test batches.
+
+    Each raw batch size (tb, tb-ragged, 1) is pushed through
+    `pad_test_batch` exactly as a session would, the step is traced at the
+    padded shapes, and the distinct-jaxpr count must be 1 — the static
+    proof that streaming a ragged test set compiles exactly one
+    executable (the regression test asserts the runtime twin via the
+    jit cache)."""
+    from repro.kernels.sti_pipeline import pad_test_batch
+
+    out: list[Finding] = []
+    for sharded in (False, True):
+        for label, step, spec, tb_r in _prepared_steps(n, d, k, tb, sharded):
+            state = tuple(_sds(s, jnp.float32) for s in spec.shapes(n))
+            train = (_sds((n, d), jnp.float32), _sds((n,), jnp.int32))
+            jaxprs = set()
+            sizes = sorted({tb_r, max(1, tb_r - 3), 1})
+            try:
+                for b in sizes:
+                    xb, yb, mask = pad_test_batch(
+                        jnp.zeros((b, d), jnp.float32),
+                        jnp.zeros((b,), jnp.int32),
+                        tb_r,
+                    )
+                    avals = tuple(
+                        _sds(a.shape, a.dtype) for a in (xb, yb, mask)
+                    )
+                    jaxprs.add(str(jax.make_jaxpr(step)(
+                        state, *avals, *train
+                    )))
+            except Exception as exc:  # noqa: BLE001
+                out.append(_finding(
+                    "C401", label,
+                    f"retrace sentinel failed to trace: {_err(exc)}",
+                ))
+                continue
+            if len(jaxprs) != 1:
+                out.append(_finding(
+                    "C401", label,
+                    f"{len(jaxprs)} distinct jaxprs across padded batch "
+                    f"sizes {sizes}: the pad-and-mask contract leaks "
+                    f"shape-specialized retraces",
+                    "pad_test_batch must return the compiled (tb, d) "
+                    "shape for every b <= tb",
+                ))
+    return out
+
+
+# ------------------------------------------------------------- engine table
+# ENGINES entries that route through the streaming pipeline and therefore
+# require a registered stream kernel
+_STREAMING_ENGINES = {"fused", "scan", "distributed", "sharded", "streamed"}
+
+
+def check_engine_table() -> list[Finding]:
+    """C501: the ENGINES table and the stream-kernel registry must agree —
+    a method advertising a streaming engine without a kernel fails at
+    dispatch; a kernel absent from the table is unreachable dead code."""
+    from repro.core.methods import ENGINES
+    from repro.kernels.stream_kernels import has_stream_kernel, stream_methods
+
+    out: list[Finding] = []
+    for method, engines in sorted(ENGINES.items()):
+        if _STREAMING_ENGINES & set(engines) and not has_stream_kernel(method):
+            out.append(_finding(
+                "C501", f"engines/{method}",
+                f"ENGINES advertises streaming engines "
+                f"{sorted(_STREAMING_ENGINES & set(engines))} but no "
+                f"update kernel is registered",
+                "register_update_kernel(...) or drop the streaming "
+                "engines from the ENGINES entry",
+            ))
+    for method in stream_methods():
+        if method not in ENGINES:
+            out.append(_finding(
+                "C501", f"engines/{method}",
+                "stream kernel registered but method missing from the "
+                "ENGINES table: unreachable from valuate()",
+                "add the method (with its engine list) to "
+                "repro.core.methods.ENGINES",
+            ))
+    return out
+
+
+def check_contracts(n: int = 64, d: int = 8, k: int = 4,
+                    tb: int = 8) -> list[Finding]:
+    """Run every Layer 2 contract check; [] means all contracts hold.
+
+    Sizes are tiny by default (tracing cost only — nothing executes), and
+    every check runs even if an earlier one fails, so one broken registry
+    entry reports alongside, not instead of, the rest."""
+    out: list[Finding] = []
+    out.extend(check_fill_registries(n, tb))
+    out.extend(check_step_contracts(n, d, k, tb))
+    out.extend(check_step_jaxprs(n, d, k, tb))
+    out.extend(check_retrace_sentinel(n, d, k, tb))
+    out.extend(check_engine_table())
+    return sorted(out, key=lambda f: (f.code, f.path))

@@ -1,0 +1,209 @@
+"""Rule registry + shared AST helpers for the reprolint AST layer.
+
+A rule is a function ``fn(ctx: ModuleContext) -> Iterable[Finding]``
+registered under a stable code with the `@rule` decorator. The driver
+(`repro.analysis.lint`) builds one `ModuleContext` per source file and
+runs every registered rule over it; rules never import the analyzed code
+(pure AST — the semantic layer is `repro.analysis.contracts`).
+
+Code families (DESIGN.md Sec. 14):
+  R1xx  buffer donation        R4xx  Pallas kernel calls
+  R2xx  retrace hazards        R5xx  dtype discipline
+  R3xx  collective/axis hygiene  R6xx  import-time compute
+
+Shared helpers centralize the repo's JAX idioms: dotted-name resolution
+(`jax.lax.psum` through `from jax import lax` aliases), detection of
+jit-wrapped functions (decorator, `functools.partial(jax.jit, ...)`, and
+`f2 = jax.jit(f)` rebinding), and literal extraction.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Iterable, Iterator, Optional
+
+from repro.analysis.findings import Finding
+
+_RULES: dict[str, tuple[str, Callable]] = {}
+
+
+def rule(code: str, name: str) -> Callable:
+    """Register a lint rule under a stable `code` (e.g. "R501")."""
+
+    def deco(fn: Callable) -> Callable:
+        _RULES[code] = (name, fn)
+        return fn
+
+    return deco
+
+
+def all_rules() -> dict[str, tuple[str, Callable]]:
+    """{code: (name, fn)} for every registered rule, insertion-ordered."""
+    return dict(_RULES)
+
+
+@dataclasses.dataclass
+class ModuleContext:
+    """One analyzed source file: parsed tree + raw lines + location info."""
+
+    relpath: str
+    source: str
+    tree: ast.Module
+    lines: list[str]
+
+    @classmethod
+    def parse(cls, source: str, relpath: str) -> "ModuleContext":
+        """Build a context from raw source (rules see syntax errors as a
+        hard failure in the driver, not here)."""
+        return cls(relpath, source, ast.parse(source), source.splitlines())
+
+    def finding(self, code: str, node: ast.AST, message: str,
+                fixit: str = "") -> Finding:
+        """A Finding anchored at `node`'s line of this module."""
+        line = getattr(node, "lineno", 0)
+        text = self.lines[line - 1] if 0 < line <= len(self.lines) else ""
+        return Finding(code, self.relpath, line, message, fixit, text)
+
+
+# ------------------------------------------------------------ AST helpers
+def dotted_name(node: ast.AST) -> str:
+    """`jax.lax.psum` -> "jax.lax.psum"; "" when not a plain dotted chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_name(call: ast.Call) -> str:
+    """Dotted name of a call's callee ("" for computed callees)."""
+    return dotted_name(call.func)
+
+
+def last_part(name: str) -> str:
+    """Final attribute of a dotted name ("jax.lax.psum" -> "psum")."""
+    return name.rsplit(".", 1)[-1] if name else ""
+
+
+def walk_functions(tree: ast.Module) -> Iterator[ast.FunctionDef]:
+    """Every (async) function definition in the module, any nesting."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def is_jit_call(call: ast.Call) -> bool:
+    """`jax.jit(...)` / bare `jit(...)` / `pjit(...)`."""
+    return last_part(call_name(call)) in ("jit", "pjit")
+
+
+def _partial_of_jit(call: ast.Call) -> bool:
+    """`functools.partial(jax.jit, ...)`."""
+    if last_part(call_name(call)) != "partial" or not call.args:
+        return False
+    first = call.args[0]
+    return last_part(dotted_name(first)) in ("jit", "pjit")
+
+
+def jitted_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """{name: FunctionDef} for every function jit-wrapped in this module.
+
+    Covers the three idioms the repo uses: `@jax.jit` /
+    `@functools.partial(jax.jit, static_argnames=...)` decorators, and a
+    same-module rebinding `g = jax.jit(f, ...)` of a local `def f`.
+    """
+    defs = {fn.name: fn for fn in walk_functions(tree)}
+    out: dict[str, ast.FunctionDef] = {}
+    for fn in defs.values():
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Call) and (
+                is_jit_call(dec) or _partial_of_jit(dec)
+            ):
+                out[fn.name] = fn
+            elif last_part(dotted_name(dec)) in ("jit", "pjit"):
+                out[fn.name] = fn
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and is_jit_call(node) and node.args:
+            target = node.args[0]
+            if isinstance(target, ast.Name) and target.id in defs:
+                out[target.id] = defs[target.id]
+    return out
+
+
+def jit_kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    """The value of keyword `name` on a call, or None."""
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def int_literals(node: ast.expr) -> Optional[list[int]]:
+    """Extract [ints] from an int / tuple-of-ints literal, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, int)):
+                return None
+            out.append(elt.value)
+        return out
+    return None
+
+
+def names_loaded(node: ast.AST) -> set[str]:
+    """All Name ids loaded anywhere under `node`."""
+    return {
+        n.id for n in ast.walk(node)
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+    }
+
+
+def assigned_names(stmt: ast.stmt) -> set[str]:
+    """Names bound by an assignment-like statement (incl. tuple targets,
+    aug-assign, with/for targets)."""
+    out: set[str] = set()
+
+    def collect(t: ast.expr) -> None:
+        if isinstance(t, ast.Name):
+            out.add(t.id)
+        elif isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                collect(e)
+        elif isinstance(t, ast.Starred):
+            collect(t.value)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            collect(t)
+    elif isinstance(stmt, (ast.AnnAssign, ast.AugAssign)):
+        collect(stmt.target)
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        collect(stmt.target)
+    return out
+
+
+def mutable_display(node: ast.expr) -> bool:
+    """Whether an expression is a list/dict/set display or comprehension
+    (an unhashable value, and a mutable one a jit closure can go stale
+    over)."""
+    return isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp))
+
+
+# Importing the rule modules registers them; keep this at the bottom so
+# the helpers above exist when they import back.
+from repro.analysis.rules import (  # noqa: E402,F401
+    donation,
+    retrace,
+    collectives,
+    pallas,
+    dtype,
+    imports,
+)

@@ -1,0 +1,152 @@
+"""R3xx — collective/axis hygiene around `shard_map`.
+
+R301: a collective (`psum`/`psum_scatter`/`all_gather`/`pmean`/
+      `axis_index`/...) inside a function mapped by `shard_map` names a
+      literal axis that does not appear in that shard_map call's literal
+      in_specs/out_specs axis names. The axis name is the binding between
+      the collective and the mesh; a typo here traces fine and produces
+      wrong numbers (or an unbound-axis error) only at run time.
+R302: a collective with a literal axis name in a module that never calls
+      `shard_map` at all: there is no mesh context to bind the axis, so
+      the call can only work if some *other* module wraps this one — an
+      implicit contract this repo expresses by threading an `axis`
+      parameter instead (see `repro.kernels.stream_kernels`).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (
+    ModuleContext,
+    dotted_name,
+    last_part,
+    rule,
+    walk_functions,
+)
+
+COLLECTIVES = {
+    "psum", "psum_scatter", "pmean", "pmax", "pmin", "all_gather",
+    "all_to_all", "ppermute", "axis_index",
+}
+
+# keyword/positional slot of the axis-name argument per collective
+_AXIS_KW = "axis_name"
+
+
+def _axis_literal(call: ast.Call) -> Optional[str]:
+    """The literal axis name of a collective call, if statically visible.
+
+    `jax.lax.psum(x, "shards")` / `all_gather(g, axis, ...)`: the axis is
+    the second positional argument or the `axis_name` keyword. Returns
+    None for non-literal axes (a variable axis is the repo's blessed
+    pattern and is never flagged).
+    """
+    # axis_index(axis) takes the axis first; every other collective takes
+    # (operand, axis)
+    pos = 0 if last_part(dotted_name(call.func)) == "axis_index" else 1
+    if len(call.args) > pos and isinstance(call.args[pos], ast.Constant) \
+            and isinstance(call.args[pos].value, str):
+        return call.args[pos].value
+    for kw in call.keywords:
+        if kw.arg == _AXIS_KW and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            return kw.value.value
+    return None
+
+
+def _spec_axis_literals(call: ast.Call) -> tuple[set[str], bool]:
+    """Literal axis names mentioned in a shard_map call's in_specs/
+    out_specs `P(...)`/`PartitionSpec(...)` expressions.
+
+    Returns (names, all_literal): `all_literal` is False when any spec
+    axis is a non-literal expression (then R301 cannot decide and stays
+    quiet).
+    """
+    names: set[str] = set()
+    all_literal = True
+    for kw in call.keywords:
+        if kw.arg not in ("in_specs", "out_specs"):
+            continue
+        for sub in ast.walk(kw.value):
+            if isinstance(sub, ast.Call) and last_part(
+                    dotted_name(sub.func)) in ("P", "PartitionSpec"):
+                for arg in sub.args:
+                    if isinstance(arg, ast.Constant):
+                        if isinstance(arg.value, str):
+                            names.add(arg.value)
+                    else:
+                        all_literal = False
+    return names, all_literal
+
+
+def _mapped_function(call: ast.Call,
+                     defs: dict[str, ast.FunctionDef]) -> Optional[ast.FunctionDef]:
+    """Resolve shard_map's mapped function to a same-module def by name."""
+    target = call.args[0] if call.args else None
+    if isinstance(target, ast.Name) and target.id in defs:
+        return defs[target.id]
+    return None
+
+
+def _collective_calls(node: ast.AST) -> Iterator[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and \
+                last_part(dotted_name(sub.func)) in COLLECTIVES:
+            yield sub
+
+
+@rule("R301", "collective-axis-mismatch")
+def check_axis_mismatch(ctx: ModuleContext) -> Iterator[Finding]:
+    """Literal collective axis not in the enclosing shard_map's literal
+    spec axes."""
+    defs = {fn.name: fn for fn in walk_functions(ctx.tree)}
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and last_part(dotted_name(node.func)) == "shard_map"):
+            continue
+        spec_axes, all_literal = _spec_axis_literals(node)
+        if not spec_axes or not all_literal:
+            continue  # axes flow in as variables: checked at trace time
+        mapped = _mapped_function(node, defs)
+        if mapped is None:
+            continue
+        for coll in _collective_calls(mapped):
+            axis = _axis_literal(coll)
+            if axis is not None and axis not in spec_axes:
+                name = last_part(dotted_name(coll.func))
+                yield ctx.finding(
+                    "R301", coll,
+                    f"collective '{name}' uses axis {axis!r} but the "
+                    f"enclosing shard_map's specs name axes "
+                    f"{sorted(spec_axes)}",
+                    "use the mesh axis the in_specs/out_specs shard over "
+                    "(thread it as a parameter like stream_kernels does)",
+                )
+
+
+@rule("R302", "collective-without-mesh-context")
+def check_collective_no_shard_map(ctx: ModuleContext) -> Iterator[Finding]:
+    """Literal-axis collective in a module with no shard_map call."""
+    has_shard_map = any(
+        isinstance(n, ast.Call)
+        and last_part(dotted_name(n.func)) == "shard_map"
+        for n in ast.walk(ctx.tree)
+    )
+    if has_shard_map:
+        return
+    for coll in _collective_calls(ctx.tree):
+        axis = _axis_literal(coll)
+        if axis is None:
+            continue  # variable axis: the caller binds it, blessed pattern
+        name = last_part(dotted_name(coll.func))
+        yield ctx.finding(
+            "R302", coll,
+            f"collective '{name}' hardcodes axis {axis!r} but this module "
+            f"never opens a shard_map: the axis binding is an implicit "
+            f"cross-module contract",
+            "accept the axis as a parameter (axis=None selects the "
+            "single-device variant) like repro.kernels.stream_kernels",
+        )

@@ -1,0 +1,80 @@
+"""R5xx — dtype discipline: low-precision matmuls must accumulate in f32.
+
+R501: `jnp.einsum` / `jnp.dot` / `jnp.matmul` / `lax.dot_general` /
+      `lax.dot` where an operand is visibly cast to bf16/f16 (a literal
+      `jnp.bfloat16`/`jnp.float16` astype, or the repo's compute-dtype
+      names `cdtype`/`compute_dtype`/`cfg.dtype`) and the call does not
+      pass `preferred_element_type`. On the MXU such a contraction
+      accumulates in bf16 partials — the t*n^2 accumulation loses ~8 bits
+      of mantissa exactly where the paper's exactness claim lives. The
+      ROADMAP's bf16-compute campaign makes every such site a trap; the
+      fix is one keyword (`preferred_element_type=jnp.float32`).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (
+    ModuleContext,
+    dotted_name,
+    last_part,
+    rule,
+)
+
+_MATMULS = {"einsum", "dot", "dot_general", "matmul", "tensordot"}
+_LOWP_LITERALS = {"bfloat16", "float16"}
+_LOWP_NAMES = {"cdtype", "compute_dtype"}
+
+
+def _lowp_dtype_expr(node: ast.expr) -> bool:
+    """Whether an expression names a (possibly) sub-f32 dtype: a literal
+    jnp.bfloat16/float16, a "bfloat16"/"float16" string, or the repo's
+    compute-dtype spellings (`cdtype`, `compute_dtype`, `cfg.dtype`)."""
+    if isinstance(node, ast.Constant) and node.value in _LOWP_LITERALS:
+        return True
+    name = dotted_name(node)
+    if last_part(name) in _LOWP_LITERALS:
+        return True
+    if name in _LOWP_NAMES or last_part(name) in _LOWP_NAMES:
+        return True
+    # cfg.dtype / config.dtype: the model compute dtype, bf16 in the
+    # shipped configs
+    if name.endswith(".dtype") and name.split(".")[0] in (
+            "cfg", "config"):
+        return True
+    return False
+
+
+def _has_lowp_operand(call: ast.Call) -> bool:
+    for arg in call.args:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Call) and isinstance(
+                    sub.func, ast.Attribute) and sub.func.attr == "astype":
+                if sub.args and _lowp_dtype_expr(sub.args[0]):
+                    return True
+    return False
+
+
+@rule("R501", "lowp-matmul-accumulation")
+def check_lowp_matmul(ctx: ModuleContext) -> Iterator[Finding]:
+    """bf16/f16 contraction without preferred_element_type=f32."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        op = last_part(dotted_name(node.func))
+        if op not in _MATMULS:
+            continue
+        if any(kw.arg == "preferred_element_type" for kw in node.keywords):
+            continue
+        if _has_lowp_operand(node):
+            yield ctx.finding(
+                "R501", node,
+                f"'{op}' contracts a bf16/f16-cast operand without "
+                f"preferred_element_type: partial sums accumulate in low "
+                f"precision",
+                "add preferred_element_type=jnp.float32 (cast the result "
+                "back down if the storage dtype matters)",
+            )

@@ -1,0 +1,196 @@
+"""R4xx — Pallas kernel-call shape checks.
+
+R401: a `pl.BlockSpec((..block..), lambda ...)` index map whose arity
+      differs from the grid rank of the enclosing `pallas_call`. Mosaic
+      reports this as an opaque lowering error (or, in interpret mode,
+      silently broadcasts) — the lint catches it at review time.
+R402: `input_output_aliases={i: j}` indices out of range of the call's
+      positional operands / outputs: an invalid alias either fails to
+      lower or silently drops the in-place update the streaming engine's
+      memory budget depends on.
+R403: a grid dimension computed with a plain floor-division `a // b` in a
+      function that never pads (`%`-arithmetic or `cdiv`): for
+      non-divisible sizes the last partial tile is simply dropped — reads
+      out of bounds on some backends, silently wrong sums on others (the
+      repo's kernels pad with `(-n) % block` and slice the result).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (
+    ModuleContext,
+    dotted_name,
+    last_part,
+    rule,
+    walk_functions,
+)
+
+
+def _pallas_calls(tree: ast.Module) -> Iterator[ast.Call]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                last_part(dotted_name(node.func)) == "pallas_call":
+            yield node
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _grid_rank(call: ast.Call, fn: Optional[ast.FunctionDef]) -> Optional[int]:
+    """Grid rank when statically visible: a tuple literal, an int literal
+    (rank 1), or a name assigned a tuple literal in the enclosing
+    function."""
+    grid = _kw(call, "grid")
+    if grid is None:
+        return None
+    if isinstance(grid, ast.Tuple):
+        return len(grid.elts)
+    if isinstance(grid, ast.Constant) and isinstance(grid.value, int):
+        return 1
+    if isinstance(grid, ast.Name) and fn is not None:
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == grid.id
+                for t in stmt.targets
+            ):
+                if isinstance(stmt.value, ast.Tuple):
+                    return len(stmt.value.elts)
+                return None
+    return None
+
+
+def _block_specs(call: ast.Call) -> Iterator[ast.Call]:
+    """Every `BlockSpec(...)` expression in in_specs/out_specs."""
+    for name in ("in_specs", "out_specs"):
+        val = _kw(call, name)
+        if val is None:
+            continue
+        for sub in ast.walk(val):
+            if isinstance(sub, ast.Call) and \
+                    last_part(dotted_name(sub.func)) == "BlockSpec":
+                yield sub
+
+
+def _enclosing_function(tree: ast.Module,
+                        node: ast.AST) -> Optional[ast.FunctionDef]:
+    """Innermost function whose span contains `node` (by line range)."""
+    best: Optional[ast.FunctionDef] = None
+    for fn in walk_functions(tree):
+        if fn.lineno <= node.lineno <= (fn.end_lineno or fn.lineno):
+            if best is None or fn.lineno >= best.lineno:
+                best = fn
+    return best
+
+
+@rule("R401", "blockspec-index-map-arity")
+def check_blockspec_arity(ctx: ModuleContext) -> Iterator[Finding]:
+    """BlockSpec index-map lambda arity must equal the grid rank."""
+    for call in _pallas_calls(ctx.tree):
+        fn = _enclosing_function(ctx.tree, call)
+        rank = _grid_rank(call, fn)
+        if rank is None:
+            continue
+        for spec in _block_specs(call):
+            lam = next(
+                (a for a in spec.args if isinstance(a, ast.Lambda)), None
+            )
+            if lam is None:
+                continue
+            arity = len(lam.args.args)
+            if arity != rank:
+                yield ctx.finding(
+                    "R401", lam,
+                    f"BlockSpec index map takes {arity} args but the grid "
+                    f"has rank {rank}",
+                    "the index map receives exactly one program id per "
+                    "grid dimension",
+                )
+
+
+@rule("R402", "io-alias-index-out-of-range")
+def check_io_alias(ctx: ModuleContext) -> Iterator[Finding]:
+    """input_output_aliases indices must address real operands/outputs."""
+    for node in ast.walk(ctx.tree):
+        # the operand count is visible at the immediate invocation:
+        # pl.pallas_call(...)(a, b, c)
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Call)
+                and last_part(dotted_name(node.func.func)) == "pallas_call"):
+            continue
+        inner = node.func
+        aliases = _kw(inner, "input_output_aliases")
+        if not isinstance(aliases, ast.Dict):
+            continue
+        n_in = len(node.args)
+        out_shape = _kw(inner, "out_shape")
+        n_out = (
+            len(out_shape.elts)
+            if isinstance(out_shape, (ast.Tuple, ast.List))
+            else 1 if out_shape is not None else None
+        )
+        for key, val in zip(aliases.keys, aliases.values):
+            if isinstance(key, ast.Constant) and isinstance(key.value, int) \
+                    and key.value >= n_in:
+                yield ctx.finding(
+                    "R402", key,
+                    f"input_output_aliases input index {key.value} out of "
+                    f"range: the kernel is invoked with {n_in} operands",
+                    "alias indices count the pallas_call invocation's "
+                    "positional operands",
+                )
+            if isinstance(val, ast.Constant) and isinstance(val.value, int) \
+                    and n_out is not None and val.value >= n_out:
+                yield ctx.finding(
+                    "R402", val,
+                    f"input_output_aliases output index {val.value} out of "
+                    f"range: out_shape declares {n_out} output(s)",
+                    "alias output indices address out_shape entries",
+                )
+
+
+def _has_pad_guard(fn: ast.FunctionDef) -> bool:
+    """Whether the function does any `%` arithmetic or cdiv/ceil-div —
+    the padding idioms that make floor-divided grids safe."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+            return True
+        if isinstance(node, ast.Call) and \
+                last_part(dotted_name(node.func)) == "cdiv":
+            return True
+    return False
+
+
+@rule("R403", "grid-floordiv-without-padding")
+def check_grid_divisibility(ctx: ModuleContext) -> Iterator[Finding]:
+    """Grid built with `a // b` in a function that never pads."""
+    for call in _pallas_calls(ctx.tree):
+        grid = _kw(call, "grid")
+        if not isinstance(grid, ast.Tuple):
+            continue
+        floordivs = [
+            elt for elt in grid.elts
+            if isinstance(elt, ast.BinOp)
+            and isinstance(elt.op, ast.FloorDiv)
+        ]
+        if not floordivs:
+            continue
+        fn = _enclosing_function(ctx.tree, call)
+        if fn is not None and _has_pad_guard(fn):
+            continue
+        for elt in floordivs:
+            yield ctx.finding(
+                "R403", elt,
+                "grid dimension uses floor division with no padding in "
+                "sight: a non-divisible size silently drops the last "
+                "partial tile",
+                "pad inputs to a block multiple ((-n) % block) and slice "
+                "the output, or use pl.cdiv with an in-kernel bounds mask",
+            )

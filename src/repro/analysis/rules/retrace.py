@@ -1,0 +1,213 @@
+"""R2xx — retrace hazards: things that silently multiply executables.
+
+The paper's O(t n^2) is a wall-clock bound only while the streamed step
+stays ONE compiled executable; these rules catch the three ways this repo
+can lose that property.
+
+R201: a jitted function closes over a module-level mutable (list/dict/set
+      display). jit captures the value at trace time; later mutation is
+      silently ignored (stale closure), and "fixing" it by retracing per
+      call is worse.
+R202: an unhashable literal (list/dict/set) passed to a cached step
+      factory (`functools.lru_cache`-wrapped, or a `*_static` keyword).
+      The repo's convention is hashable tuples — `_method_static` /
+      `resolve_fill` produce them — an unhashable static either raises or
+      defeats the executable cache.
+R203: a Python branch on a traced argument's shape (`.shape` / `.ndim` /
+      `len(arg)`, transitively) inside a jitted function: every new shape
+      traces a new executable. The repo's contract is pad-to-fixed-shape
+      (`pad_test_batch`) — shape branches belong in the un-jitted wrapper.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.findings import Finding
+from repro.analysis.rules import (
+    ModuleContext,
+    dotted_name,
+    jitted_functions,
+    last_part,
+    mutable_display,
+    names_loaded,
+    rule,
+    walk_functions,
+)
+
+
+def _module_mutables(tree: ast.Module) -> dict[str, ast.stmt]:
+    """Module-level names bound to list/dict/set displays."""
+    out: dict[str, ast.stmt] = {}
+    for stmt in tree.body:
+        if isinstance(stmt, ast.Assign) and mutable_display(stmt.value):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = stmt
+        elif (isinstance(stmt, ast.AnnAssign) and stmt.value is not None
+              and mutable_display(stmt.value)
+              and isinstance(stmt.target, ast.Name)):
+            out[stmt.target.id] = stmt
+    return out
+
+
+def _local_names(fn: ast.FunctionDef) -> set[str]:
+    """Parameter + locally assigned names of a function."""
+    args = fn.args
+    params = {
+        a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)
+    }
+    if args.vararg:
+        params.add(args.vararg.arg)
+    if args.kwarg:
+        params.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            params.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params.add(node.name)
+    return params
+
+
+@rule("R201", "jit-closure-over-mutable")
+def check_jit_closure_mutable(ctx: ModuleContext) -> Iterator[Finding]:
+    """Jitted function reads a module-level list/dict/set by closure."""
+    mutables = _module_mutables(ctx.tree)
+    if not mutables:
+        return
+    for name, fn in jitted_functions(ctx.tree).items():
+        free = names_loaded(fn) - _local_names(fn)
+        for captured in sorted(free & set(mutables)):
+            yield ctx.finding(
+                "R201", fn,
+                f"jitted '{name}' closes over module-level mutable "
+                f"'{captured}': mutations after the first trace are "
+                f"silently ignored",
+                f"pass '{captured}' (or the values it resolves) as a "
+                f"static argument, or freeze it to a tuple",
+            )
+
+
+def _lru_cached_functions(tree: ast.Module) -> set[str]:
+    """Names of functions decorated with functools.lru_cache/cache."""
+    out: set[str] = set()
+    for fn in walk_functions(tree):
+        for dec in fn.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            # functools.partial(functools.lru_cache, ...) is not a thing;
+            # handle plain and maxsize-parameterized forms
+            if isinstance(target, ast.Call):
+                target = target.func
+            if last_part(dotted_name(target)) in ("lru_cache", "cache"):
+                out.add(fn.name)
+    return out
+
+
+@rule("R202", "unhashable-static-argument")
+def check_unhashable_static(ctx: ModuleContext) -> Iterator[Finding]:
+    """List/dict/set literal passed to a cached step factory or a
+    `*_static` keyword."""
+    cached = _lru_cached_functions(ctx.tree)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func)
+        is_cached = last_part(callee) in cached
+        for kw in node.keywords:
+            if kw.arg and kw.arg.endswith("_static") and \
+                    mutable_display(kw.value):
+                yield ctx.finding(
+                    "R202", kw.value,
+                    f"unhashable literal for static keyword '{kw.arg}' of "
+                    f"'{callee}'",
+                    "pass the hashable tuple form (e.g. "
+                    "tuple(sorted(d.items())) — see _method_static)",
+                )
+            elif is_cached and mutable_display(kw.value):
+                yield ctx.finding(
+                    "R202", kw.value,
+                    f"unhashable literal for '{kw.arg}' of lru_cached "
+                    f"'{callee}': the executable cache keys on argument "
+                    f"hash",
+                    "pass a hashable tuple instead",
+                )
+        if is_cached:
+            for arg in node.args:
+                if mutable_display(arg):
+                    yield ctx.finding(
+                        "R202", arg,
+                        f"unhashable positional literal passed to "
+                        f"lru_cached '{callee}'",
+                        "pass a hashable tuple instead",
+                    )
+
+
+def _shape_tainted_locals(fn: ast.FunctionDef, params: set[str]) -> set[str]:
+    """Names transitively derived from a parameter's `.shape`/`.ndim`/len().
+
+    One forward pass in statement order (the repo's functions are straight-
+    line enough that loops-of-assignments don't need a fixpoint).
+    """
+
+    def shape_ref(expr: ast.expr, tainted: set[str]) -> bool:
+        for sub in ast.walk(expr):
+            if isinstance(sub, ast.Attribute) and sub.attr in ("shape",
+                                                               "ndim"):
+                base = dotted_name(sub.value)
+                if base.split(".")[0] in params:
+                    return True
+            elif (isinstance(sub, ast.Call)
+                  and last_part(dotted_name(sub.func)) == "len"
+                  and sub.args and isinstance(sub.args[0], ast.Name)
+                  and sub.args[0].id in params):
+                return True
+            elif isinstance(sub, ast.Name) and sub.id in tainted:
+                return True
+        return False
+
+    tainted: set[str] = set()
+    for stmt in ast.walk(fn):
+        if isinstance(stmt, ast.Assign) and shape_ref(stmt.value, tainted):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    tainted.add(t.id)
+                elif isinstance(t, (ast.Tuple, ast.List)):
+                    tainted.update(
+                        e.id for e in t.elts if isinstance(e, ast.Name)
+                    )
+    return tainted
+
+
+@rule("R203", "shape-branch-in-jit")
+def check_shape_branch(ctx: ModuleContext) -> Iterator[Finding]:
+    """`if`/`while` on a traced argument's shape inside a jitted function."""
+    for name, fn in jitted_functions(ctx.tree).items():
+        args = fn.args
+        params = {
+            a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)
+        }
+        tainted = _shape_tainted_locals(fn, params)
+
+        def branches(node: ast.AST) -> Iterator[ast.stmt]:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.If, ast.While)):
+                    yield sub
+
+        for branch in branches(fn):
+            test_names = names_loaded(branch.test)
+            direct = any(
+                isinstance(sub, ast.Attribute)
+                and sub.attr in ("shape", "ndim")
+                and dotted_name(sub.value).split(".")[0] in params
+                for sub in ast.walk(branch.test)
+            )
+            if direct or (test_names & tainted):
+                kind = "if" if isinstance(branch, ast.If) else "while"
+                yield ctx.finding(
+                    "R203", branch,
+                    f"`{kind}` on a traced argument's shape inside jitted "
+                    f"'{name}': every new shape traces a new executable",
+                    "hoist the branch into the un-jitted wrapper, or pad "
+                    "to a fixed shape (pad_test_batch pattern)",
+                )

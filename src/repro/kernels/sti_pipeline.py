@@ -262,21 +262,29 @@ def _method_static(method_opts: Optional[dict]) -> tuple:
 
 def _tuple_state(inner: Callable) -> Callable:
     """Adapt an unpacked-state step (acc, diag, ...) to the uniform
-    tuple-state contract `step(state, *args) -> state`."""
+    tuple-state contract `step(state, *args) -> state`.
+
+    The wrapped jitted step stays reachable as `step.inner` so callers
+    (the contract checker's retrace sentinel, the retrace regression
+    test) can inspect its compilation cache without unwrapping closures.
+    """
 
     def step(state, *args):
         return tuple(inner(*state, *args))
 
+    step.inner = inner
     return step
 
 
 def _vector_state(inner: Callable) -> Callable:
     """Adapt a bare-vector step (vec, ...) to the uniform tuple-state
-    contract `step(state, *args) -> state`."""
+    contract `step(state, *args) -> state`. The jitted step stays
+    reachable as `step.inner` (see `_tuple_state`)."""
 
     def step(state, *args):
         return (inner(state[0], *args),)
 
+    step.inner = inner
     return step
 
 

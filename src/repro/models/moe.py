@@ -117,10 +117,15 @@ def _moe_math(p, x, cfg: ModelConfig):
     expert_in = expert_in.at[gidx, slot].add(tok_rep * keep[..., None])
     expert_in = expert_in.reshape(n_grp, e, cap, d)
 
-    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w1"].astype(cdtype))
+    # expert matmuls accumulate in f32 even when cdtype is bf16 (MXU
+    # partials would otherwise sum in bf16); storage stays cdtype
+    h = jnp.einsum("gecd,edf->gecf", expert_in, p["w1"].astype(cdtype),
+                   preferred_element_type=jnp.float32).astype(cdtype)
     h = jax.nn.silu(h) * jnp.einsum(
-        "gecd,edf->gecf", expert_in, p["w3"].astype(cdtype))
-    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(cdtype))
+        "gecd,edf->gecf", expert_in, p["w3"].astype(cdtype),
+        preferred_element_type=jnp.float32).astype(cdtype)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w2"].astype(cdtype),
+                            preferred_element_type=jnp.float32).astype(cdtype)
     expert_out = expert_out.reshape(n_grp, e * cap, d)
 
     # gather-combine

@@ -16,10 +16,18 @@ import pytest
 SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 
 # The documented public surface (ISSUE 4 satellite; extended by ISSUE 5
-# with the method-generic streaming engine modules and by ISSUE 6 with
-# the resilient runtime): the valuation API, the streaming pipelines/
-# kernels, the sharding helpers, and the fault-tolerance layer.
+# with the method-generic streaming engine modules, by ISSUE 6 with
+# the resilient runtime, and by ISSUE 7 with the reprolint analysis
+# subsystem): the valuation API, the streaming pipelines/kernels, the
+# sharding helpers, the fault-tolerance layer, and the static-analysis
+# front door.
 PUBLIC_MODULES = [
+    "analysis/__init__.py",
+    "analysis/findings.py",
+    "analysis/baseline.py",
+    "analysis/lint.py",
+    "analysis/contracts.py",
+    "analysis/rules/__init__.py",
     "core/methods.py",
     "core/session.py",
     "core/results.py",

@@ -1,0 +1,160 @@
+"""Retrace-count regression: one compilation per prepared streaming step.
+
+The pad-and-mask contract (`pad_test_batch`) promises that a full batch, a
+ragged trailing batch, and a single-row batch all execute the SAME compiled
+step. These tests drive each prepared step through all three batch shapes
+and assert the underlying jit compiled exactly once (`_cache_size()` on the
+jitted callable, reachable as `step.inner` on the tuple-state wrappers) —
+the runtime twin of the contract checker's static C401 sentinel."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.sti_pipeline import (
+    make_fused_step,
+    make_point_step,
+    make_sharded_point_step,
+    make_sharded_step,
+    pad_test_batch,
+    prepare_fused_step,
+    prepare_sharded_stream_step,
+    prepare_stream_step,
+)
+from repro.kernels.stream_kernels import stream_methods
+
+N, D, K, TB = 16, 4, 3, 8
+# full, ragged-trailing, and single-row raw batch sizes
+BATCH_SIZES = (TB, TB - 3, 1)
+
+METHODS = ("sti", "knn_shapley", "wknn", "loo")
+
+
+def _fresh_caches():
+    """Clear the step factories' lru caches so each test measures its own
+    jit object's compilation count, not a warm one from another test."""
+    make_fused_step.cache_clear()
+    make_point_step.cache_clear()
+    make_sharded_step.cache_clear()
+    make_sharded_point_step.cache_clear()
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    x_train = jnp.asarray(rng.normal(size=(N, D)), jnp.float32)
+    y_train = jnp.asarray(rng.integers(0, 2, size=(N,)), jnp.int32)
+    return x_train, y_train
+
+
+def _drive(step, state, tb, seed=1):
+    """Run one padded batch of every raw size through the step."""
+    rng = np.random.default_rng(seed)
+    x_train, y_train = _data()
+    for b in BATCH_SIZES:
+        xb, yb, mask = pad_test_batch(
+            jnp.asarray(rng.normal(size=(b, D)), jnp.float32),
+            jnp.asarray(rng.integers(0, 2, size=(b,)), jnp.int32),
+            tb,
+        )
+        state = step(state, xb, yb, mask, x_train, y_train)
+    return state
+
+
+def test_methods_under_test_are_registered():
+    assert set(METHODS) <= set(stream_methods())
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_stream_step_compiles_once(method):
+    _fresh_caches()
+    step, _, spec = prepare_stream_step(
+        method, N, D, K, test_batch=TB, fill="chunked", distance="xla"
+    )
+    _drive(step, spec.init(N), TB)
+    assert step.inner._cache_size() == 1, (
+        f"{method}: {step.inner._cache_size()} executables for "
+        f"batch sizes {BATCH_SIZES}; the pad-and-mask contract leaks "
+        f"shape-specialized retraces"
+    )
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_sharded_stream_step_compiles_once(method):
+    _fresh_caches()
+    step, resolved, mesh, spec = prepare_sharded_stream_step(
+        method, N, D, K, shards=1, test_batch=TB,
+        fill="chunked", distance="xla",
+    )
+    # place the state on the mesh as the sharded session does, then warm
+    # up with two full batches: the first step can normalize an output
+    # sharding (e.g. P(axis) on (n,) collapses to replicated on small
+    # meshes), which keys ONE extra cache entry on the round-trip --
+    # a sharding artifact, not a batch-shape retrace
+    tb = resolved["test_batch"]
+    state = tuple(
+        jax.device_put(a, s) for a, s in zip(
+            spec.init(N), spec.shardings(mesh, mesh.axis_names[0])
+        )
+    )
+    x_train, y_train = _data()
+    xb, yb, mask = pad_test_batch(
+        jnp.zeros((tb, D), jnp.float32), jnp.zeros((tb,), jnp.int32), tb
+    )
+    for _ in range(2):
+        state = step(state, xb, yb, mask, x_train, y_train)
+    steady = step.inner._cache_size()
+    _drive(step, state, tb)
+    assert step.inner._cache_size() == steady, (
+        f"{method}: ragged/single-row batches added "
+        f"{step.inner._cache_size() - steady} executable(s)"
+    )
+
+
+def test_fused_step_compiles_once():
+    # the raw (unpacked-state) fused step, as the one-shot driver uses it
+    _fresh_caches()
+    step, _ = prepare_fused_step(
+        N, D, K, test_batch=TB, fill="chunked", distance="xla"
+    )
+    rng = np.random.default_rng(2)
+    x_train, y_train = _data()
+    acc = jnp.zeros((N, N), jnp.float32)
+    diag = jnp.zeros((N,), jnp.float32)
+    for b in BATCH_SIZES:
+        xb, yb, mask = pad_test_batch(
+            jnp.asarray(rng.normal(size=(b, D)), jnp.float32),
+            jnp.asarray(rng.integers(0, 2, size=(b,)), jnp.int32),
+            TB,
+        )
+        acc, diag = step(acc, diag, xb, yb, mask, x_train, y_train)
+    assert step._cache_size() == 1
+
+
+def test_padded_ragged_batch_is_exact():
+    """The single compiled step is not just cached — it is CORRECT on
+    ragged input: padding with a zero mask must contribute nothing."""
+    _fresh_caches()
+    method = "knn_shapley"
+    step, _, spec = prepare_stream_step(
+        method, N, D, K, test_batch=TB, fill="chunked", distance="xla"
+    )
+    rng = np.random.default_rng(3)
+    x_train, y_train = _data()
+    b = TB - 3
+    xt = jnp.asarray(rng.normal(size=(b, D)), jnp.float32)
+    yt = jnp.asarray(rng.integers(0, 2, size=(b,)), jnp.int32)
+    # padded through the shared step
+    xb, yb, mask = pad_test_batch(xt, yt, TB)
+    padded = step(spec.init(N), xb, yb, mask, x_train, y_train)
+    # unpadded oracle: a step compiled exactly at b rows
+    oracle_step, _, _ = prepare_stream_step(
+        method, N, D, K, test_batch=b, fill="chunked", distance="xla"
+    )
+    exact = oracle_step(
+        spec.init(N), xt, yt, jnp.ones((b,), jnp.float32),
+        x_train, y_train,
+    )
+    np.testing.assert_allclose(
+        np.asarray(padded[0]), np.asarray(exact[0]), rtol=1e-6, atol=1e-6
+    )
