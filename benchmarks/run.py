@@ -457,6 +457,70 @@ print(f"RECT,{{nr}},{{tr}},{{us_rect_scan:.1f}},{{us_rect_pal:.1f}},{{err_rect:.
     ]
 
 
+# ------------------------------------------------------------- service:
+# the online valuation service (ISSUE 8): request latency through the
+# admission/coalescing path, and the incremental remove_points (warm rank
+# caches, masked refold only) vs the cache_policy="off" full recompute at
+# n=2048 -- the speedup that justifies carrying the caches at all
+def bench_service():
+    from repro.serving.valuation_service import ValuationService
+
+    n, t, d, k, tb = 2048, 256, 64, 5, 64
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    y = rng.integers(0, 2, n).astype(np.int32)
+    xt = rng.normal(size=(t, d)).astype(np.float32)
+    yt = rng.integers(0, 2, t).astype(np.int32)
+
+    def build(policy):
+        svc = ValuationService(
+            x, y, method="knn_shapley", k=k, capacity=n + 64,
+            test_batch=tb, cache_policy=policy, seed=0, distance="xla")
+        for i in range(0, t, tb):
+            svc.value_query(xt[i:i + tb], yt[i:i + tb])
+        return svc
+
+    svc = build("lazy")
+    h = svc.health()
+    rows = [("service_query_n2048_t256", h["latency_p50_s"] * 1e6,
+             f"p99_us={h['latency_p99_s'] * 1e6:.0f};"
+             f"query_batches={t // tb}",
+             {"method": "knn_shapley", "engine": "service"})]
+
+    reps = 5
+    svc.remove_points([n - 1])    # warms the lazy rank caches + compiles
+    t0 = time.perf_counter()
+    for i in range(reps):
+        svc.remove_points([i])
+    us_inc = (time.perf_counter() - t0) / reps * 1e6
+
+    ref = build("off")
+    ref.remove_points([n - 1])    # compile parity with the warm run
+    t0 = time.perf_counter()
+    for i in range(reps):
+        ref.remove_points([i])
+    us_full = (time.perf_counter() - t0) / reps * 1e6
+
+    # the incremental path's exactness AT benchmark scale: both services
+    # removed the identical ids, values must agree bit-for-bit
+    a = np.asarray(svc.get_values().payload["values"])
+    b = np.asarray(ref.get_values().payload["values"])
+    exact = bool(np.array_equal(a, b))
+    svc.close()
+    ref.close()
+    rows += [
+        ("service_remove_full_recompute_n2048", us_full,
+         "cache_policy=off: rank recompute per batch + refold",
+         {"method": "knn_shapley", "engine": "service"}),
+        ("service_remove_incremental_n2048", us_inc,
+         f"cache_policy=lazy warm: masked refold only;"
+         f"speedup_vs_full={us_full / max(us_inc, 1e-9):.2f}x;"
+         f"bit_exact={exact}",
+         {"method": "knn_shapley", "engine": "service"}),
+    ]
+    return rows
+
+
 # ------------------------------------------------------------ lint gate:
 # the reprolint CI job's own cost (DESIGN.md Sec. 14) -- the full-tree AST
 # lint plus the abstract-eval contract checks must stay well under a
@@ -494,6 +558,7 @@ BENCHES = {
     "structure": bench_interaction_structure,
     "kernels": bench_kernels,
     "sharded": bench_sharded,
+    "service": bench_service,
     "lint": bench_lint,
 }
 
@@ -526,6 +591,7 @@ def main() -> None:
         "structure": {"method": "sti", "engine": "scan"},
         "kernels": {"method": "sti", "engine": "kernel"},
         "sharded": {"method": "sti", "engine": "sharded"},
+        "service": {"method": "knn_shapley", "engine": "service"},
         "lint": {"method": None, "engine": None},
     }
     for nm in names:

@@ -206,4 +206,5 @@ from repro.analysis.rules import (  # noqa: E402,F401
     pallas,
     dtype,
     imports,
+    hostsync,
 )

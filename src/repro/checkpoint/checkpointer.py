@@ -120,14 +120,61 @@ class Checkpointer:
         os.fsync(fd)
         os.close(fd)
         if final.exists():
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-        self._gc()
+            # overwrite (e.g. a rebase checkpoint at an already-written
+            # step): move the old directory aside FIRST so there is no
+            # instant with neither version on disk, then drop it
+            old = self.dir / f"step_{step:08d}.old.tmp"
+            if old.exists():
+                shutil.rmtree(old)
+            os.rename(final, old)
+            os.rename(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, final)
+        self.prune()
 
-    def _gc(self):
-        done = sorted(self.all_steps())
-        for s in done[: -self.keep]:
-            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+    def prune(self, keep_last: Optional[int] = None) -> list[int]:
+        """Retention policy: drop all but the newest `keep_last` steps
+        (default: the constructor's `keep`), returning the pruned steps.
+
+        VERIFICATION-AWARE: restore's corruption-fallback walk is only as
+        good as the steps left on disk, so if none of the survivors passes
+        sha256 verification the newest VERIFIED older step is retained as
+        well -- pruning never removes the last good restore point (when
+        nothing verifies, only the plain newest-N survive; there is no
+        good point to protect). Checked newest-first, so the common case
+        (the just-written step verifies) costs one checksum pass.
+
+        Deletion is ATOMIC per step: the directory is renamed to a
+        `.prune.tmp` name -- invisible to `all_steps` -- before removal,
+        so a crash mid-delete can never leave a half-deleted directory
+        that restore might pick up.
+        """
+        keep = self.keep if keep_last is None else int(keep_last)
+        steps = self.all_steps()
+        if keep < 1 or len(steps) <= keep:
+            return []
+        survivors = set(steps[-keep:])
+        if not any(self.verify_step(s)
+                   for s in sorted(survivors, reverse=True)):
+            for s in reversed(steps[:-keep]):
+                if self.verify_step(s):
+                    survivors.add(s)
+                    break
+        pruned = []
+        for s in steps:
+            if s in survivors:
+                continue
+            trash = self.dir / f"step_{s:08d}.prune.tmp"
+            if trash.exists():
+                shutil.rmtree(trash)
+            try:
+                os.rename(self.dir / f"step_{s:08d}", trash)
+            except OSError:
+                continue
+            shutil.rmtree(trash, ignore_errors=True)
+            pruned.append(s)
+        return pruned
 
     # -------------------------------------------------------- restore
     def all_steps(self) -> list[int]:

@@ -51,7 +51,11 @@ import jax.numpy as jnp
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.results import ValuationResult
 from repro.core.session import ShardedValuationSession, ValuationSession
-from repro.distributed.fault_tolerance import HealthLog, StepGuard
+from repro.distributed.fault_tolerance import (
+    HealthLog,
+    StepGuard,
+    degrade_plan,
+)
 
 __all__ = ["ResilientValuationSession"]
 
@@ -193,8 +197,8 @@ class ResilientValuationSession:
             raise RuntimeError(
                 f"batch gap: arrived seq {seq} but state holds "
                 f"{self._folded}; the driver must replay in order")
-        xb = np.asarray(x_test_batch)
-        yb = np.asarray(y_test_batch)
+        xb = np.asarray(x_test_batch)  # sync-point: host-staged for replay
+        yb = np.asarray(y_test_batch)  # sync-point: host-staged for replay
         if self.ckpt_every > 0:
             self._buffer.append((seq, xb, yb))
         self._fold(seq, xb, yb)
@@ -285,20 +289,60 @@ class ResilientValuationSession:
         marked dirty, so the caller's refold recovers it from the last good
         checkpoint + replay buffer before touching the failing batch."""
         cur = self.shards
-        if not isinstance(self._inner, ShardedValuationSession) \
-                or cur <= self.min_shards:
+        if not isinstance(self._inner, ShardedValuationSession):
             return False
-        n = int(np.asarray(self._x_train).shape[0])
-        new = cur - 1
-        while new > self.min_shards and n % new:
-            new -= 1
-        new = max(new, self.min_shards)
+        new = degrade_plan(
+            int(self._inner.x_train.shape[0]), cur, self.min_shards
+        )
+        if new is None:
+            return False
         self._stats["degradations"].append(
             {"from": int(cur), "to": int(new)})
         self._ckpt.wait()
         self._build_inner(new)
         self._dirty = True
         return True
+
+    # ------------------------------------------------------------ mutations
+    def rebase(self, state_arrays, *, t: int, seq: Optional[int] = None,
+               x_train=None, y_train=None) -> None:
+        """Install an externally recomputed state as the NEW ground truth.
+
+        This is the train-set-mutation boundary of the online valuation
+        service: `add_points`/`remove_points` refold the full batch log
+        against the mutated train set OUTSIDE the fold loop, then rebase.
+        Three invariants make recovery safe across the boundary:
+
+          * the replay buffer is CLEARED -- pre-mutation batches must never
+            be refolded against the post-mutation train set;
+          * a SYNCHRONOUS checkpoint of the rebased state is written at the
+            current sequence number, so rollback/restore lands on this side
+            of the mutation (overwriting any same-step pre-mutation
+            checkpoint);
+          * `t`/`seq` reset the fold counters to what the new state
+            actually contains (`seq` defaults to whatever has arrived, so
+            in-order drivers just continue).
+
+        Older checkpoints become semantically stale (pre-mutation); walking
+        back to one fails fast with a replay-buffer gap instead of silently
+        mixing train-set versions -- the service's full-recompute fallback
+        is the recovery path beyond this boundary.
+        """
+        self._ckpt.wait()
+        if x_train is not None:
+            self._x_train = x_train
+            self._y_train = y_train
+            self._inner.set_train(x_train, y_train)
+        self._inner._place_state(tuple(state_arrays))
+        self._inner._t = int(t)
+        self._folded = int(seq) if seq is not None \
+            else max(self._folded, self._arrived)
+        self._arrived = self._folded
+        self._buffer.clear()
+        self._dirty = False
+        if self.ckpt_every > 0:
+            self._checkpoint(force=True)
+            self._ckpt.wait()
 
     # --------------------------------------------------------- checkpoints
     def _config(self) -> dict:
@@ -312,7 +356,7 @@ class ResilientValuationSession:
             "ckpt_every": self.ckpt_every, "session_opts": opts,
         }
 
-    def _tree_like(self) -> dict:
+    def _tree_like(self) -> dict:  # sync-point: checkpoint-tree host staging
         names = self._inner._spec.names
         n = int(self._inner.x_train.shape[0])
         shapes = self._inner._spec.shapes(n)
@@ -323,7 +367,9 @@ class ResilientValuationSession:
                       for nm, s in zip(names, shapes)},
         }
 
-    def _state_tree(self) -> dict:
+    def _state_tree(self) -> dict:  # sync-point: checkpoint snapshot is
+        # synchronous BY DESIGN (recovery semantics); only the WRITE is
+        # overlapped with the next step via save_async
         return {
             "config": np.asarray(json.dumps(self._config())),
             "scalars": {"seq": np.int64(self._folded),

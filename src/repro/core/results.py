@@ -93,6 +93,26 @@ class ValuationResult:
             )
         return self.phi
 
+    def restrict(self, indices) -> "ValuationResult":
+        """Sub-result over the given train-point rows (stable order).
+
+        `phi` keeps the `indices x indices` block, `point_values` the
+        `indices` entries; `meta` gains ``restricted_from`` (the original
+        n). This is how the online valuation service extracts the LIVE
+        slots from its fixed-capacity state: removed/free sentinel slots
+        contribute exactly zero rows/columns, so restricting commutes with
+        `values()` aggregation.
+        """
+        idx = np.asarray(indices, np.int64)
+        phi = None if self.phi is None else jnp.asarray(self.phi)[idx][:, idx]
+        pv = (None if self.point_values is None
+              else jnp.asarray(self.point_values)[idx])
+        return self.replace(
+            phi=phi, point_values=pv,
+            meta={**self.meta, "restricted_from": self.n,
+                  "n": int(idx.shape[0])},
+        )
+
     # ------------------------------------------------------------- analytics
     def efficiency_gap(self, test_accuracy) -> jnp.ndarray:
         """|value mass - v(N)|: the STI efficiency axiom for interaction

@@ -154,6 +154,26 @@ class ValuationSession:
         """Hook: device placement of one padded batch (sharded override)."""
         return xs, ys, mask
 
+    def set_train(self, x_train, y_train) -> None:
+        """Replace the training arrays IN PLACE, same (n, d) shape.
+
+        The compiled step and the accumulator state are shape-keyed, so
+        only a same-shape replacement is legal -- this is the hook the
+        online valuation service's fixed-capacity mutation scheme uses
+        (removed/free slots carry `stream_kernels.SENTINEL_COORD` /
+        `SENTINEL_LABEL`, so they rank last and contribute exactly zero).
+        Raw features: `embed_fn` is applied exactly as in the constructor.
+        """
+        x = jnp.asarray(self._embed(jnp.asarray(x_train)))
+        y = jnp.asarray(y_train)
+        if x.shape != self.x_train.shape:
+            raise ValueError(
+                f"set_train must keep the train shape {self.x_train.shape}, "
+                f"got {x.shape} (the step and state are shape-keyed)"
+            )
+        self.x_train = x
+        self.y_train = y
+
     # ------------------------------------------------------------- results
     def _gathered_state(self) -> tuple:
         """Hook: the state as whole host-addressable arrays (sharded
@@ -359,6 +379,17 @@ class ShardedValuationSession(ValuationSession):
         rep = replicated_sharding(self.mesh)
         self.x_train = jax.device_put(self.x_train, rep)
         self.y_train = jax.device_put(self.y_train, rep)
+
+    def set_train(self, x_train, y_train) -> None:
+        """Same-shape train replacement, re-placed replicated on the mesh
+        (see `ValuationSession.set_train`)."""
+        super().set_train(x_train, y_train)
+        if self.mesh is not None:
+            from repro.distributed.sharding import replicated_sharding
+
+            rep = replicated_sharding(self.mesh)
+            self.x_train = jax.device_put(self.x_train, rep)
+            self.y_train = jax.device_put(self.y_train, rep)
 
     def _place_batch(self, xs, ys, mask):
         if self.mesh is None:

@@ -49,7 +49,19 @@ def distance_weights(d2: jnp.ndarray, kind: str = "rbf") -> jnp.ndarray:
     so streamed and one-shot runs agree bit-for-bit per test point.
     """
     if kind == "rbf":
-        sigma2 = jnp.maximum(jnp.mean(d2, axis=-1, keepdims=True), 1e-12)
+        # The bandwidth is the mean over REAL columns only: soft-deleted
+        # train slots (the online service's fixed-capacity mutation
+        # scheme, `stream_kernels.SENTINEL_COORD`) carry squared
+        # distances ~1e30 that would otherwise blow up the row mean and
+        # silently change every live weight. The 1e20 cutoff matches
+        # `stream_kernels.SENTINEL_D2`; real data never gets near it, so
+        # sentinel-free rows keep the original mean bit-for-bit.
+        real = d2 < 1e20
+        cnt = jnp.maximum(jnp.sum(real, axis=-1, keepdims=True), 1)
+        sigma2 = jnp.maximum(
+            jnp.sum(jnp.where(real, d2, 0.0), axis=-1, keepdims=True) / cnt,
+            1e-12,
+        )
         return jnp.exp(-d2 / (2.0 * sigma2))
     if kind == "inverse":
         return 1.0 / (1.0 + jnp.sqrt(d2))

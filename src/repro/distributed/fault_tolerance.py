@@ -11,19 +11,25 @@ hooks so it is fully testable single-host:
                       exponential backoff with DETERMINISTIC seeded jitter,
                       so a fleet of preempted workers does not thunder back
                       in lockstep yet every run is reproducible.
-  * ElasticPlan    -- given a device set, picks the largest (data, model)
-                      mesh consistent with the TP degree and returns the
-                      re-sharding plan; combined with Checkpointer.restore
-                      (shardings=new) this is the elastic-restart path.
+  * degrade_plan   -- the graceful-degradation policy: given the train
+                      size and the current shard count, the next smaller
+                      usable device count after a device loss (the dense
+                      device-count-independent checkpoints make the
+                      re-shard itself trivial).
   * HealthLog      -- per-step wall-time ring buffer; flags stragglers as
                       steps > mean + k*std over the PRECEDING window (the
                       sample under judgement never contaminates its own
                       baseline; it joins the window only after the verdict).
 
 `repro.core.resilient.ResilientValuationSession` drives the streaming
-valuation engine through StepGuard + HealthLog; `repro.distributed.
-fault_injection` provides the deterministic failure hooks that prove the
-whole path works single-host.
+valuation engine through StepGuard + HealthLog + degrade_plan, and the
+online service (`repro.serving.valuation_service`) reuses StepGuard for
+per-request deadlines and HealthLog for request-latency accounting;
+`repro.distributed.fault_injection` provides the deterministic failure
+hooks that prove the whole path works single-host. (The speculative
+TP-mesh planner that once lived here -- ElasticPlan/plan_mesh -- was
+never wired to the valuation path and is gone; the valuation mesh is
+1-D, so the degradation policy IS the plan.)
 """
 
 from __future__ import annotations
@@ -35,7 +41,7 @@ from typing import Callable, Optional
 import numpy as np
 import jax
 
-__all__ = ["StepGuard", "ElasticPlan", "HealthLog", "plan_mesh"]
+__all__ = ["StepGuard", "HealthLog", "degrade_plan"]
 
 
 class HealthLog:
@@ -152,29 +158,22 @@ class StepGuard:
         raise RuntimeError(f"step failed after {self.max_retries} retries: {err}")
 
 
-@dataclass(frozen=True)
-class ElasticPlan:
-    """Re-sharding plan for an elastic restart (mesh shape + axis names +
-    the fraction of devices the plan leaves idle)."""
+def degrade_plan(n: int, current: int,
+                 min_shards: int = 1) -> Optional[int]:
+    """Next smaller usable shard count after losing device(s), or None.
 
-    mesh_shape: tuple
-    axis_names: tuple
-    lost_fraction: float
-
-
-def plan_mesh(n_devices: int, tp: int = 16, prefer_pods: int = 1) -> ElasticPlan:
-    """Largest (pod, data, model=tp) mesh fitting n_devices. Elastic
-    scale-down keeps TP fixed (weight layouts survive) and shrinks the
-    data axis -- restore() re-shards, the data pipeline re-balances by
-    step-deterministic assignment."""
-    if n_devices < tp:
-        raise ValueError(f"need >= {tp} devices for TP degree {tp}")
-    data = n_devices // tp
-    used = data * tp
-    if prefer_pods > 1 and data % prefer_pods == 0:
-        shape = (prefer_pods, data // prefer_pods, tp)
-        names = ("pod", "data", "model")
-    else:
-        shape = (data, tp)
-        names = ("data", "model")
-    return ElasticPlan(shape, names, 1.0 - used / n_devices)
+    The 1-D valuation mesh needs the shard count to divide n (per-device
+    row blocks are exact), so the plan is the largest D < `current` with
+    n % D == 0, floored at `min_shards` (the floor wins even when it does
+    not divide n -- `shard_count` re-clamps at session build). None means
+    no degradation is possible (`current` is already at or below the
+    floor); the caller should re-raise / fail over instead.
+    """
+    current = int(current)
+    min_shards = max(1, int(min_shards))
+    if current <= min_shards:
+        return None
+    new = current - 1
+    while new > min_shards and int(n) % new:
+        new -= 1
+    return max(new, min_shards)

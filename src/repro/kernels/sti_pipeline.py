@@ -64,6 +64,7 @@ from repro.kernels.stream_kernels import (
     AccumulatorSpec,
     UpdateKernel,
     accumulator_spec,
+    make_refold_kernel,
     make_update_kernel,
 )
 
@@ -73,6 +74,9 @@ __all__ = [
     "prepare_fused_step",
     "pad_test_batch",
     "make_point_step",
+    "make_rank_step",
+    "make_refold_step",
+    "prepare_refold_step",
     "prepare_stream_step",
     "make_sharded_step",
     "make_sharded_point_step",
@@ -253,6 +257,112 @@ def make_point_step(
         return body((vec,), xb, yb, mask, x_train, y_train)[0]
 
     return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def make_rank_step(
+    distance: str = "xla",
+    distance_static: tuple = (),
+) -> Callable:
+    """Stage A of the incremental-mutation path: the jitted distance + sort
+    prefix of the streaming step, split out so its outputs can be CACHED:
+
+        rank(xb, x_train) -> (d2, order)
+
+    d2 (tb, n) f32 squared distances, order (tb, n) int32 stable argsort
+    (closest first). The online valuation service runs this once per cached
+    test batch and then replays mutations through `make_refold_step`, which
+    skips both the distance matmul and the sort. NOT donated: the outputs
+    are long-lived cache entries, not streaming temporaries.
+    """
+    dist_fn = _distance_fn(distance, distance_static)
+
+    def rank(xb, x_train):
+        d2 = dist_fn(xb, x_train)
+        return d2, jnp.argsort(d2, axis=-1, stable=True)
+
+    return jax.jit(rank)
+
+
+@functools.lru_cache(maxsize=None)
+def make_refold_step(
+    method: str,
+    k: int,
+    method_static: tuple = (),
+    fill: str = "chunked",
+    fill_static: tuple = (),
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Stage B of the incremental-mutation path: the jitted refold of one
+    CACHED test batch under a train-slot liveness mask (tuple-state):
+
+        step(state, d2, order, yb, mask, y_train, keep) -> state
+
+    `d2`/`order` come from `make_rank_step` (possibly captured against an
+    older train-set snapshot); `keep` (n,) marks live slots. The body
+    compacts the cached order against `keep` and runs the method's
+    registered contrib/[g]/update closures (`stream_kernels.
+    make_refold_kernel`), so a remove_points refold is EXACTLY the state a
+    full recompute against the mutated train set would produce -- without
+    touching the distance or sort stages. Only `state` is donated (the
+    cached intermediates are reused across mutations).
+    """
+    if accumulator_spec(method).kind == "interaction":
+        body = make_refold_kernel(
+            method, int(k), fill=fill, fill_static=fill_static
+        )
+    else:
+        body = make_refold_kernel(method, int(k), opts=dict(method_static))
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+
+    def step(state, d2, order, yb, mask, y_train, keep):
+        return tuple(body(state, d2, order, yb, mask, y_train, keep))
+
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+def prepare_refold_step(
+    method: str,
+    n: int,
+    d: int,
+    k: int,
+    *,
+    test_batch: int = 256,
+    fill: str = "auto",
+    fill_params: Optional[dict] = None,
+    distance: str = "auto",
+    distance_params: Optional[dict] = None,
+    autotune: bool = False,
+    method_opts: Optional[dict] = None,
+) -> tuple[Callable, Callable, dict, "AccumulatorSpec"]:
+    """Resolve the incremental-mutation pair for `method` and return
+    `(refold_step, rank_step, resolved, spec)` (see `make_rank_step` /
+    `make_refold_step`). Resolution mirrors `prepare_stream_step` -- same
+    square fill registry for interaction methods, same distance registry --
+    so the refold replays bit-for-bit what the live streaming step folds.
+    Always single-device: sharded sessions gather their state dense, refold,
+    and re-place (mutations are off the request hot loop)."""
+    spec = accumulator_spec(method)
+    tb = max(1, int(test_batch))
+    dist_name, dist_static = resolve_distance(
+        distance, tb, n, d, distance_params=distance_params,
+        autotune=autotune,
+    )
+    if spec.kind == "interaction":
+        fill_name, fill_static = resolve_fill(
+            fill, n, tb, fill_params=fill_params, autotune=autotune
+        )
+        refold = make_refold_step(
+            method, int(k), (), fill_name, fill_static
+        )
+        resolved = {"fill": fill_name, "distance": dist_name}
+    else:
+        refold = make_refold_step(
+            method, int(k), _method_static(method_opts)
+        )
+        resolved = {"fill": None, "distance": dist_name}
+    return refold, make_rank_step(dist_name, dist_static), resolved, spec
 
 
 def _method_static(method_opts: Optional[dict]) -> tuple:

@@ -45,19 +45,46 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.sti_knn import accumulate_fill, accumulate_rect_fill
+from repro.core.sti_knn import (
+    accumulate_fill,
+    accumulate_rect_fill,
+    ranks_from_order,
+    superdiagonal_g,
+)
 
 __all__ = [
     "AccumulatorSpec",
     "UpdateKernel",
     "INTERACTION_STATE",
     "POINT_STATE",
+    "SENTINEL_COORD",
+    "SENTINEL_LABEL",
     "register_update_kernel",
     "make_update_kernel",
     "accumulator_spec",
     "stream_methods",
     "has_stream_kernel",
+    "compact_order",
+    "register_refold_builder",
+    "make_refold_kernel",
 ]
+
+# Soft-delete sentinels for fixed-capacity training sets (the online
+# valuation service mutates the train set without retracing): a removed /
+# never-filled slot keeps its position but gets coordinates SENTINEL_COORD
+# and label SENTINEL_LABEL. The squared distance to a sentinel slot is
+# ~d * 1e30 -- finite in f32 (1e30 << 3.4e38) yet astronomically larger
+# than any real distance, so sentinel slots sort to the tail of every
+# neighbour ranking; the label never matches a real test label, so their
+# contribution is exactly zero through every registered method. NOTE
+# 1e15, not 1e30: the expansion-form distance squares the coordinate, and
+# (1e30)^2 overflows f32 to inf, which the -2ab cross term then turns
+# into inf - inf = NaN.
+SENTINEL_COORD = 1e15
+SENTINEL_LABEL = -1
+# Any squared distance at or above this is treated as a sentinel column
+# (real squared distances would need coordinates ~1e10 to reach it).
+SENTINEL_D2 = 1e20
 
 
 @dataclasses.dataclass(frozen=True)
@@ -313,6 +340,118 @@ def _point_factory(contrib_fn: Callable, values_fn: Callable) -> Callable:
                             contrib, update)
 
     return factory
+
+
+# -------------------------------------------------------------- refold path
+# Incremental train-set mutation (the online valuation service's
+# add_points / remove_points) refolds CACHED per-batch intermediates --
+# the (tb, n) squared distances and argsort order from the distance stage
+# -- against the current liveness mask, skipping the distance matmul and
+# the sort entirely. The refold reuses each method's registered
+# contrib/update closures, so it is exact by construction: for a removal,
+# compacting the cached order (live slots to the front, preserving their
+# relative order; dead slots to the tail) reproduces bit-for-bit the order
+# a fresh argsort of the mutated train set would produce on the live
+# prefix, and every dead-slot contribution is zero through the sentinel
+# label (see SENTINEL_COORD above; DESIGN.md Sec. 15 has the proof
+# obligations per method).
+
+
+def compact_order(order: jnp.ndarray, keep: jnp.ndarray):
+    """Compact a cached argsort order against a liveness mask.
+
+    Args:
+      order: (tb, n) argsort of cached squared distances (train indices,
+        closest first).
+      keep: (n,) liveness per train slot (0 = removed/free, nonzero =
+        live), indexed by train coordinate.
+
+    Returns:
+      (new_order, ranks): `new_order` (tb, n) with the live entries moved
+      to the front and the dead entries to the tail, each group preserving
+      its relative order -- exactly what a stable argsort of the mutated
+      distance row produces, because dead slots hold sentinel distances
+      larger than any real one; `ranks` is its inverse permutation.
+    """
+    keep_s = jnp.take(keep, order) > 0          # liveness in sorted coords
+    live = jnp.cumsum(keep_s.astype(jnp.int32), axis=-1)
+    dead = jnp.cumsum((~keep_s).astype(jnp.int32), axis=-1)
+    n_live = live[..., -1:]
+    pos = jnp.where(keep_s, live - 1, n_live + dead - 1)
+    row = jnp.arange(order.shape[0], dtype=pos.dtype)[:, None]
+    new_order = jnp.zeros_like(order).at[row, pos].set(order)
+    return new_order, ranks_from_order(new_order)
+
+
+_REFOLD_BUILDERS: dict[str, Callable] = {}
+
+
+def register_refold_builder(kind: str, builder: Callable) -> None:
+    """Register the refold-step builder for one `AccumulatorSpec.kind`.
+
+    `builder(kernel, k) -> refold` receives the method's bound
+    `UpdateKernel` and returns the pure function
+    `refold(state, d2, order, yb, mask, y_train, keep) -> state` that
+    folds one cached test batch into `state` under the liveness mask
+    `keep`. Registered per spec (not per method) because the refold only
+    depends on the state contract -- the per-method math rides in through
+    the kernel's contrib/update closures.
+    """
+    _REFOLD_BUILDERS[kind] = builder
+
+
+def make_refold_kernel(
+    method: str,
+    k: int,
+    *,
+    opts: Optional[dict] = None,
+    fill: Optional[str] = None,
+    fill_static: tuple = (),
+) -> Callable:
+    """Build `refold(state, d2, order, yb, mask, y_train, keep) -> state`
+    for `method`: the incremental-mutation twin of the streaming step,
+    driven from cached distance/order intermediates instead of raw test
+    features. Single-device only (square fill registry); sharded sessions
+    gather their state, refold densely, and re-place (the mutation path is
+    off the request hot loop)."""
+    spec = accumulator_spec(method)
+    builder = _REFOLD_BUILDERS.get(spec.kind)
+    if builder is None:
+        raise ValueError(
+            f"no refold builder for accumulator kind {spec.kind!r}; "
+            f"registered: {sorted(_REFOLD_BUILDERS)}"
+        )
+    kernel = make_update_kernel(
+        method, int(k), opts=opts, fill=fill, fill_static=fill_static
+    )
+    return builder(kernel, int(k))
+
+
+def _masked_refold_builder(kernel: UpdateKernel, k: int) -> Callable:
+    """The generic refold body shared by both state contracts: compact the
+    cached order, sentinel-mask dead distance columns (so row statistics
+    like the wknn rbf bandwidth see exactly the reduced train set), then
+    run the method's own contrib -> [g] -> update closures."""
+
+    def refold(state, d2, order, yb, mask, y_train, keep):
+        d2 = jnp.where(keep[None, :] > 0, d2, jnp.float32(SENTINEL_D2 * 1e10))
+        new_order, ranks = compact_order(order, keep)
+        match = (jnp.take(y_train, new_order) == yb[:, None]).astype(
+            jnp.float32
+        )
+        u = kernel.contrib(d2, new_order, match, mask)
+        g = (
+            superdiagonal_g(u, k, mode=kernel.g_mode)
+            if kernel.needs_g
+            else None
+        )
+        return kernel.update(state, u, g, ranks, mask)
+
+    return refold
+
+
+register_refold_builder("interaction", _masked_refold_builder)
+register_refold_builder("point", _masked_refold_builder)
 
 
 register_update_kernel("sti", INTERACTION_STATE, _interaction_factory("sti"))

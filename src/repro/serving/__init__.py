@@ -1,0 +1,2 @@
+"""Serving layer: the LLM slot engine (`repro.serving.engine`) and the
+online valuation service (`repro.serving.valuation_service`)."""

@@ -74,6 +74,7 @@ class Engine:
     def submit(self, prompt_tokens) -> int:
         rid = self._next_id
         self._next_id += 1
+        # sync-point: prompt staging copies the client's tokens once
         self.queue.append((rid, np.asarray(prompt_tokens, np.int32)))
         return rid
 
@@ -135,7 +136,8 @@ class Engine:
         nxt, self.caches = self._decode(
             self.params, jnp.asarray(tokens), self.caches,
             jnp.asarray(self.pos), sub)
-        nxt = np.asarray(nxt)
+        nxt = np.asarray(nxt)  # sync-point: sampled tokens feed host
+        # slot bookkeeping; one transfer per decode step by design
         for i, s in enumerate(self.slots):
             if s.done:
                 continue

@@ -17,10 +17,10 @@ SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 
 # The documented public surface (ISSUE 4 satellite; extended by ISSUE 5
 # with the method-generic streaming engine modules, by ISSUE 6 with
-# the resilient runtime, and by ISSUE 7 with the reprolint analysis
-# subsystem): the valuation API, the streaming pipelines/kernels, the
-# sharding helpers, the fault-tolerance layer, and the static-analysis
-# front door.
+# the resilient runtime, by ISSUE 7 with the reprolint analysis
+# subsystem, and by ISSUE 8 with the online valuation service): the
+# valuation API, the streaming pipelines/kernels, the sharding helpers,
+# the fault-tolerance layer, and the static-analysis front door.
 PUBLIC_MODULES = [
     "analysis/__init__.py",
     "analysis/findings.py",
@@ -44,6 +44,7 @@ PUBLIC_MODULES = [
     "distributed/fault_tolerance.py",
     "distributed/fault_injection.py",
     "checkpoint/checkpointer.py",
+    "serving/valuation_service.py",
 ]
 
 MIN_COVERAGE = 0.90

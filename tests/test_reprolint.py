@@ -229,20 +229,57 @@ def ndev():
     return jax.device_count()
 """,
     ),
+    "R701": (
+        """
+import numpy as np
+def serve(batch):
+    vals = np.asarray(batch.values)
+    return vals.sum()
+""",
+        """
+import numpy as np
+def serve(batch):
+    # sync-point: result extraction must land on the host
+    vals = np.asarray(batch.values)
+    return vals.sum()
+""",
+    ),
 }
+
+# path-scoped rules only fire on matching relpaths; fixtures for them are
+# linted as if they lived at this path (everything else uses the default
+# "<snippet>", which no path-scoped rule matches)
+FIXTURE_PATHS = {"R701": "serving/valuation_service.py"}
 
 
 @pytest.mark.parametrize("code", sorted(FIXTURES))
 def test_rule_trips_on_fixture(code):
     trip, _ = FIXTURES[code]
-    got = {f.code for f in lint_source(trip, codes={code})}
+    relpath = FIXTURE_PATHS.get(code, "<snippet>")
+    got = {f.code for f in lint_source(trip, relpath, codes={code})}
     assert got == {code}
 
 
 @pytest.mark.parametrize("code", sorted(FIXTURES))
 def test_rule_passes_fixed_fixture(code):
     _, fixed = FIXTURES[code]
-    assert lint_source(fixed, codes={code}) == []
+    relpath = FIXTURE_PATHS.get(code, "<snippet>")
+    assert lint_source(fixed, relpath, codes={code}) == []
+
+
+def test_hostsync_rule_is_path_scoped():
+    # the R701 trip fixture is CLEAN outside the request-path modules, in
+    # scope for every serving/ file and core/resilient.py, and satisfied
+    # by a def-header annotation as well as a line-level one
+    trip, _ = FIXTURES["R701"]
+    assert lint_source(trip, "kernels/sti_pipeline.py",
+                       codes={"R701"}) == []
+    assert {f.code for f in lint_source(
+        trip, "core/resilient.py", codes={"R701"})} == {"R701"}
+    header = trip.replace(
+        "def serve(batch):",
+        "def serve(batch):  # sync-point: host staging by design")
+    assert lint_source(header, "serving/engine.py", codes={"R701"}) == []
 
 
 def test_all_rule_codes_have_fixtures():

@@ -15,7 +15,8 @@ from repro.configs.base import ModelConfig
 from repro.training.optimizer import (
     AdamWConfig, adamw_init, adamw_update, cosine_schedule, global_norm)
 from repro.checkpoint.checkpointer import Checkpointer
-from repro.distributed.fault_tolerance import HealthLog, StepGuard, plan_mesh
+from repro.distributed.fault_tolerance import (
+    HealthLog, StepGuard, degrade_plan)
 from repro.training.compression import (
     topk_error_feedback, init_error, _quantize_int8)
 
@@ -70,6 +71,57 @@ def test_checkpoint_roundtrip_and_gc(tmp_path):
                                   np.asarray(tree["a"]) + 30)
 
 
+def test_checkpointer_prune_retains_newest_verified(tmp_path):
+    """`prune(keep_last=1)` keeps the newest checkpoint by step, but when
+    that one fails verification it ALSO retains the newest verified older
+    step so restore never walks back onto nothing."""
+    from repro.distributed.fault_injection import corrupt_checkpoint_leaf
+
+    ck = Checkpointer(tmp_path, keep=10)   # gc disabled; prune manually
+    tree = {"a": jnp.arange(8, dtype=jnp.float32)}
+    for s in (1, 2, 3):
+        ck.save(s, jax.tree.map(lambda x: x + s, tree))
+    corrupt_checkpoint_leaf(tmp_path, step=3, seed=0)
+
+    pruned = ck.prune(keep_last=1)
+    assert pruned == [1]
+    assert ck.all_steps() == [2, 3]        # 2 survives as verified fallback
+    assert ck.latest_verified_step() == 2
+    restored, step = ck.restore(tree)      # restore walks back past 3
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) + 2)
+
+
+def test_checkpointer_prune_deletes_atomically(tmp_path):
+    """A half-finished prune (`.prune.tmp` rename survived, rmtree did
+    not) must be invisible to step listing and to restore."""
+    ck = Checkpointer(tmp_path, keep=10)
+    tree = {"a": jnp.ones(4)}
+    for s in (1, 2):
+        ck.save(s, tree)
+    assert ck.prune(keep_last=1) == [1]
+    assert ck.all_steps() == [2]
+    # simulate the torn delete: a renamed-away dir left on disk
+    (tmp_path / "step_00000007.prune.tmp").mkdir()
+    assert ck.all_steps() == [2]
+    assert ck.restore(tree)[1] == 2
+
+
+def test_checkpoint_same_step_overwrite(tmp_path):
+    """Re-saving a step (the session rebase path) atomically replaces the
+    old payload instead of erroring or tearing."""
+    ck = Checkpointer(tmp_path)
+    tree = {"a": jnp.zeros(4)}
+    ck.save(5, jax.tree.map(lambda x: x + 1, tree))
+    ck.save(5, jax.tree.map(lambda x: x + 9, tree))
+    assert ck.all_steps() == [5]
+    restored, step = ck.restore(tree)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.full(4, 9.0, np.float32))
+
+
 def test_checkpoint_async_and_atomicity(tmp_path):
     ck = Checkpointer(tmp_path)
     tree = {"w": jnp.ones((128, 128))}
@@ -109,14 +161,20 @@ def test_health_log_flags_straggler():
     assert h.record(5.0)
 
 
-def test_elastic_plan():
-    p = plan_mesh(512, tp=16, prefer_pods=2)
-    assert p.mesh_shape == (2, 16, 16) and p.lost_fraction == 0.0
-    p = plan_mesh(500, tp=16)  # lost 12 devices -> shrink data axis
-    assert p.mesh_shape == (31, 16)
-    assert 0 < p.lost_fraction < 0.05
-    with pytest.raises(ValueError):
-        plan_mesh(8, tp=16)
+def test_degrade_plan_next_divisor():
+    # largest D < current with n % D == 0 (per-device row blocks exact)
+    assert degrade_plan(64, 8) == 4
+    assert degrade_plan(60, 6) == 5
+    assert degrade_plan(64, 3) == 2   # 3 was never a divisor; 2 is
+    assert degrade_plan(61, 8) == 1   # prime n: all the way down
+
+
+def test_degrade_plan_floor_and_exhaustion():
+    assert degrade_plan(64, 8, min_shards=4) == 4
+    # the floor wins even when it does not divide n (shard_count re-clamps)
+    assert degrade_plan(62, 8, min_shards=3) == 3
+    assert degrade_plan(64, 4, min_shards=4) is None   # at the floor
+    assert degrade_plan(64, 1) is None                 # single device
 
 
 # ---------------------------------------------------------------- compression
