@@ -21,7 +21,11 @@ from repro.core.methods import (
     list_methods,
     valid_engines,
 )
-from repro.core.session import ShardedValuationSession, ValuationSession
+from repro.core.session import (
+    ApproxValuationSession,
+    ShardedValuationSession,
+    ValuationSession,
+)
 
 __all__ = [
     "sti_knn_interactions",
@@ -45,4 +49,5 @@ __all__ = [
     "list_methods",
     "ValuationSession",
     "ShardedValuationSession",
+    "ApproxValuationSession",
 ]

@@ -27,12 +27,17 @@ entry = default):
     scan         single-jit lax.scan path
     distributed  shard_map production cell over a device mesh
     sharded      multi-device fused pipeline, (n/D, n) row-block accs
+    approx       LSH top-m candidate preselection + sparse COO pair
+                 accumulator (`ApproxValuationSession`; certified error
+                 knob top_m/recall_target, measured recall + bound in meta)
   point-value methods ("knn_shapley"/"wknn"/"loo"):
     streamed     the method-generic streaming pipeline via ValuationSession
                  (DEFAULT: sessions, checkpoints, padded ragged batches)
     eager        direct one-shot call of the public function (same step,
                  no session scaffolding)
     sharded      multi-device vector pipeline ((n/D,) state per device)
+    approx       LSH top-m candidates + O(m) scatter-add updates, same
+                 certified error reporting as the interaction form
     oracle       O(2^n) brute-force subset enumeration -- parity tests
                  only, guarded to n <= 16 ("knn_shapley"/"wknn")
 """
@@ -63,12 +68,23 @@ __all__ = [
 # method -> supported engines, first entry is the default. Methods added
 # via register_method may extend this table (or stay engine-less).
 ENGINES: dict[str, tuple[str, ...]] = {
-    "sti": ("fused", "scan", "distributed", "sharded"),
-    "sii": ("fused", "scan", "distributed", "sharded"),
-    "knn_shapley": ("streamed", "eager", "sharded", "oracle"),
-    "wknn": ("streamed", "eager", "sharded", "oracle"),
-    "loo": ("streamed", "eager", "sharded"),
+    "sti": ("fused", "scan", "distributed", "sharded", "approx"),
+    "sii": ("fused", "scan", "distributed", "sharded", "approx"),
+    "knn_shapley": ("streamed", "eager", "sharded", "approx", "oracle"),
+    "wknn": ("streamed", "eager", "sharded", "approx", "oracle"),
+    "loo": ("streamed", "eager", "sharded", "approx"),
 }
+
+# result-meta keys the approx engine reports (copied from the session's
+# finalize meta into the registry result so callers see the certified
+# error story without digging into session internals)
+_APPROX_META_KEYS = (
+    "top_m", "approx_exact", "recall_estimate", "matched_prefix",
+    "error_bound", "pairs_stored", "n_tables", "n_bits", "window",
+    "recall_target", "recall_target_met", "probe_k", "probed_rows",
+)
+# constructor knobs `engine="approx"` accepts at the registry level
+_APPROX_OPTIONS = ("top_m", "seed", "recall_target", "approx_params")
 
 # engine="oracle" enumerates 2^n subsets: hard-capped so a stray call on a
 # real training set cannot wedge the process for hours
@@ -170,6 +186,7 @@ class _InteractionMethod:
     accepted_options = frozenset({
         "engine", "test_batch", "fill", "fill_params", "distance",
         "distance_params", "autotune", "mesh", "shards",
+        "top_m", "seed", "recall_target", "approx_params",
     })
 
     def __init__(self, name: str, mode: str):
@@ -182,7 +199,10 @@ class _InteractionMethod:
                  distance: str = "auto",
                  distance_params: Optional[dict] = None,
                  autotune: bool = False, mesh=None,
-                 shards: Optional[int] = None) -> ValuationResult:
+                 shards: Optional[int] = None,
+                 top_m: Optional[int] = None, seed: int = 0,
+                 recall_target: Optional[float] = None,
+                 approx_params: Optional[dict] = None) -> ValuationResult:
         if engine not in ENGINES[self.name]:
             raise _engine_error(self.name, engine)
         if shards is not None and engine != "sharded":
@@ -192,9 +212,18 @@ class _InteractionMethod:
                 f"shards= is only meaningful with engine='sharded' "
                 f"(got engine={engine!r})"
             )
+        if engine != "approx" and (
+            top_m is not None or recall_target is not None or approx_params
+        ):
+            # same contract as shards=: never silently drop a knob that
+            # changes the result's error story
+            raise ValueError(
+                f"top_m/recall_target/approx_params are only meaningful "
+                f"with engine='approx' (got engine={engine!r})"
+            )
         meta = _base_meta(x_train, x_test, k)
         meta.update(method=self.name, mode=self.mode, engine=engine,
-                    streamed=engine in ("fused", "sharded"))
+                    streamed=engine in ("fused", "sharded", "approx"))
         # provenance must name the RESOLVED implementations, not "auto":
         # resolve after the run (an autotune=True run populates the cache
         # first, so this lookup sees the same winner the run used)
@@ -227,6 +256,22 @@ class _InteractionMethod:
                 return_info=True,
             )
             meta.update(resolved)
+        elif engine == "approx":
+            from repro.core.session import ApproxValuationSession
+
+            akw = dict(approx_params or {})
+            akw.update(top_m=top_m, seed=seed, recall_target=recall_target)
+            sess = ApproxValuationSession(
+                x_train, y_train, k=k, mode=self.mode, test_batch=tb,
+                fill=fill, fill_params=fill_params, distance=distance,
+                distance_params=distance_params, autotune=autotune, **akw,
+            )
+            res = sess.update(x_test, y_test).finalize()
+            phi = res.phi
+            meta.update(test_batch=tb, fill=sess._resolved.get("fill"),
+                        distance=sess._resolved.get("distance"))
+            meta.update({nm: res.meta[nm] for nm in _APPROX_META_KEYS
+                         if nm in res.meta})
         elif engine == "scan":
             from repro.core.sti_knn import resolve_fill, sti_knn_interactions
 
@@ -285,8 +330,10 @@ class _PointValueMethod:
     `ValuationSession(mode=name)` over the test set, "eager" calls the
     public function directly (same generic step, no session scaffolding),
     "sharded" drives a `ShardedValuationSession` ((n/D,) vector state per
-    device), "oracle" runs the registered O(2^n) brute force (parity tests
-    only; guarded to n <= 16).
+    device), "approx" drives an `ApproxValuationSession` (LSH top-m
+    candidates, O(m) scatter updates, certified error meta), "oracle" runs
+    the registered O(2^n) brute force (parity tests only; guarded to
+    n <= 16).
     """
 
     def __init__(self, name: str, fn: Callable,
@@ -298,7 +345,7 @@ class _PointValueMethod:
         self._eager_kw = _keyword_options(fn)
         self.accepted_options = self._eager_kw | {
             "engine", "test_batch", "distance", "autotune", "shards",
-        }
+        } | set(_APPROX_OPTIONS)
 
     def __call__(self, x_train, y_train, x_test, y_test, *, k: int = 5,
                  engine: Optional[str] = None, **opts) -> ValuationResult:
@@ -318,6 +365,12 @@ class _PointValueMethod:
                 f"shards= is only meaningful with engine='sharded' "
                 f"(got engine={engine!r})"
             )
+        approx = {nm: opts.pop(nm) for nm in _APPROX_OPTIONS if nm in opts}
+        if approx and engine != "approx":
+            raise ValueError(
+                f"options {sorted(approx)} are only meaningful with "
+                f"engine='approx' (got engine={engine!r})"
+            )
         # execution options the caller passed EXPLICITLY: forwarded to the
         # engine that runs, rejected (never silently dropped) by one that
         # cannot honor them -- same contract as shards= above
@@ -328,7 +381,8 @@ class _PointValueMethod:
         meta = _base_meta(x_train, x_test, k)
         meta.update(
             method=self.name, engine=engine,
-            streamed=engine in ("streamed", "sharded"), resolved_fill=None,
+            streamed=engine in ("streamed", "sharded", "approx"),
+            resolved_fill=None,
             **{k_: v for k_, v in {**kw, **explicit}.items()
                if isinstance(v, (str, int, float))},
         )
@@ -349,6 +403,25 @@ class _PointValueMethod:
                 )
             values = self._fn(x_train, y_train, x_test, y_test, k,
                               **dict(kw, **explicit))
+        elif engine == "approx":
+            from repro.core.session import ApproxValuationSession
+
+            t = int(x_test.shape[0])
+            akw = dict(approx.pop("approx_params", None) or {})
+            akw.update(approx)
+            sess = ApproxValuationSession(
+                x_train, y_train, k=k, mode=self.name,
+                test_batch=max(1, min(test_batch, max(t, 1))),
+                distance=explicit.get("distance", "xla"),
+                autotune=bool(explicit.get("autotune", False)),
+                method_opts=kw or None, **akw,
+            )
+            res = sess.update(x_test, y_test).finalize()
+            values = res.point_values
+            meta.update({nm: res.meta[nm] for nm in _APPROX_META_KEYS
+                         if nm in res.meta})
+            meta.update({nm: v for nm, v in sess._resolved.items()
+                         if nm in ("distance", "test_batch")})
         else:  # streamed | sharded
             from repro.core.session import (
                 ShardedValuationSession, ValuationSession)

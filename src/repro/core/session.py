@@ -51,7 +51,11 @@ import jax.numpy as jnp
 
 from repro.core.results import ValuationResult
 
-__all__ = ["ValuationSession", "ShardedValuationSession"]
+__all__ = [
+    "ValuationSession",
+    "ShardedValuationSession",
+    "ApproxValuationSession",
+]
 
 
 class ValuationSession:
@@ -180,12 +184,17 @@ class ValuationSession:
         sessions re-place their shards as replicated)."""
         return self._state
 
+    def _finalize_arrays(self) -> dict:
+        """Hook: the finalized `ValuationResult` array kwargs (the approx
+        session densifies its sparse pair accumulator here)."""
+        return self._spec.result_arrays(self._gathered_state(), self._t)
+
     def finalize(self) -> ValuationResult:
         """Snapshot the running mean as a `ValuationResult` (the session
         remains live; later updates refine the next finalize)."""
         if self._t == 0:
             raise ValueError("no test points seen: call update() first")
-        arrays = self._spec.result_arrays(self._gathered_state(), self._t)
+        arrays = self._finalize_arrays()
         meta = {
             "method": self.mode,
             "mode": self.mode,
@@ -232,10 +241,7 @@ class ValuationSession:
             "method_opts": self.method_opts,
             **self._extra_config(),
         }
-        arrays = {
-            name: np.asarray(a)
-            for name, a in zip(self._spec.names, self._gathered_state())
-        }
+        arrays = self._checkpoint_arrays()
         out = base.with_suffix(".npz")
         tmp = base.with_suffix(".npz.tmp")
         try:
@@ -250,10 +256,31 @@ class ValuationSession:
             tmp.unlink(missing_ok=True)
         return out
 
+    def _checkpoint_arrays(self) -> dict:
+        """Hook: the named host arrays a checkpoint persists (the approx
+        session appends its sparse pair-accumulator arrays)."""
+        return {
+            name: np.asarray(a)
+            for name, a in zip(self._spec.names, self._gathered_state())
+        }
+
     @classmethod
     def _restore_opts(cls, cfg: dict) -> dict:
         """Hook: constructor kwargs a subclass recovers from the config."""
         return {}
+
+    @classmethod
+    def _state_names(cls, cfg: dict) -> tuple:
+        """Hook: the checkpoint array names to load for this config (the
+        spec's stable names by default; the approx interaction session adds
+        its sparse pair arrays)."""
+        from repro.kernels.stream_kernels import accumulator_spec
+
+        return accumulator_spec(cfg["mode"]).names
+
+    def _restore_extra(self, cfg: dict) -> None:
+        """Hook: reinstall non-array checkpoint state after the accumulator
+        arrays are placed (e.g. the approx session's probe statistics)."""
 
     @classmethod
     def restore(cls, path, x_train, y_train, *,
@@ -261,15 +288,12 @@ class ValuationSession:
                 **session_opts) -> "ValuationSession":
         """Rebuild a session from `checkpoint()` output plus the (fixed)
         training set; continues exactly where the saved session stopped."""
-        from repro.kernels.stream_kernels import accumulator_spec
-
         base = Path(path)
         if base.suffix != ".npz":
             base = base.with_suffix(".npz")
         with np.load(base) as z:
             cfg = json.loads(str(z["config"]))
-            spec = accumulator_spec(cfg["mode"])
-            arrays = tuple(z[name] for name in spec.names)
+            arrays = tuple(z[name] for name in cls._state_names(cfg))
         # default to the checkpoint's RESOLVED fill/distance so the restored
         # session runs the same (possibly autotuned) implementations; the
         # caller may override, e.g. when restoring on a different backend.
@@ -299,6 +323,7 @@ class ValuationSession:
             )
         sess._place_state(arrays)
         sess._t = int(cfg["t"])
+        sess._restore_extra(cfg)
         return sess
 
     def _place_state(self, arrays) -> None:
@@ -434,3 +459,287 @@ class ShardedValuationSession(ValuationSession):
         # request the checkpoint's shard count; shard_count() re-clamps it
         # to whatever THIS host can satisfy (possibly 1 -> fused fallback)
         return {"shards": cfg["shards"]} if "shards" in cfg else {}
+
+
+class ApproxValuationSession(ValuationSession):
+    """Approximate top-m streaming valuation (`engine="approx"`).
+
+    Same fold contract as `ValuationSession`, but each test point is
+    compared against only the `top_m` candidates an LSH index proposes
+    (`repro.kernels.ann`; DESIGN.md Sec. 16) -- O(t (L log n + L W d +
+    m log m)) instead of O(t n d + t n log n), with point values landing
+    via O(m) scatter-adds and STI pairs in a host-side COO accumulator
+    that stores only pairs that ever co-occur in a candidate set.
+
+    The error knob is CERTIFIED, not heuristic: every step probes its
+    first `recall_sample` rows against an exact distance row, and
+    `finalize()` reports the measured candidate recall plus the matched-
+    prefix-derived bound from `repro.core.approx` in
+    meta["recall_estimate"] / meta["error_bound"]. `recall_target` adds
+    meta["recall_target_met"] so callers can reject a run whose index was
+    too weak.
+
+    Determinism: LSH tables are built from `jax.random.key(seed)`, the
+    COO merge is a stable host-side reduction, and a checkpoint persists
+    the probe statistics and sparse state -- two identical runs, or a
+    mid-stream checkpoint/restore, are bit-identical. With `top_m >= n`
+    (the default) the session dispatches to the dense exact step -- the
+    SAME executable as the exact engine, so m=n is bit-identical to exact
+    by construction and meta reports error_bound 0.
+    """
+
+    _ENGINE = "approx"
+
+    def __init__(self, x_train, y_train, *, top_m: Optional[int] = None,
+                 seed: int = 0, n_tables: Optional[int] = None,
+                 n_bits: int = 16, window: Optional[int] = None,
+                 recall_sample: int = 8, recall_k: Optional[int] = None,
+                 recall_target: Optional[float] = None, **opts):
+        self.top_m = None if top_m is None else int(top_m)
+        self.seed = int(seed)
+        self.n_bits = int(n_bits)
+        self.recall_sample = int(recall_sample)
+        self.recall_k = None if recall_k is None else int(recall_k)
+        self.recall_target = (
+            None if recall_target is None else float(recall_target)
+        )
+        self._requested_tables = n_tables
+        self._requested_window = window
+        self._prefix_min: Optional[int] = None
+        self._recall_sum = 0.0
+        self._recall_rows = 0
+        self._probe_k = 0
+        self._pairs = None
+        self._approx_exact = False
+        super().__init__(x_train, y_train, **opts)
+
+    def _build(self, fill, fill_params, distance, distance_params, autotune):
+        from repro.kernels.stream_kernels import AccumulatorSpec
+        from repro.kernels.stream_kernels import accumulator_spec
+
+        n, d = (int(s) for s in self.x_train.shape)
+        m = n if self.top_m is None else min(self.top_m, n)
+        self.m = m
+        if m >= n:
+            # Exact fallback: the candidate list would be the whole train
+            # set, so run the dense step instead -- the SAME executable as
+            # the exact engine (bit-identity at m=n is by construction, not
+            # by numerical luck: a float scatter-add path could never
+            # guarantee it).
+            self._approx_exact = True
+            super()._build(
+                fill, fill_params, distance, distance_params, autotune
+            )
+            self._resolved = dict(
+                self._resolved, top_m=m, approx_exact=True
+            )
+            return
+        if m < self.k + 1:
+            raise ValueError(
+                f"top_m must be >= k+1 = {self.k + 1} (the KNN utility and "
+                f"the loo window need the first k+1 neighbours), got {m}"
+            )
+        spec = accumulator_spec(self.mode)
+        ann_l, ann_w = self._requested_tables, self._requested_window
+        if ann_l is None or ann_w is None:
+            from repro.kernels.autotune import best_ann
+
+            tuned_l, tuned_w = best_ann(
+                n, self.test_batch, d, m, allow_tune=autotune
+            )
+            ann_l = int(ann_l or tuned_l)
+            ann_w = int(ann_w or tuned_w)
+        ann_l, ann_w = int(ann_l), min(int(ann_w), n)
+        if ann_l * ann_w < m:  # pool must be able to cover top_m
+            ann_w = min(n, -(-m // ann_l))
+        from repro.kernels.ann import build_tables
+
+        self._tables = build_tables(
+            self.x_train, key=jax.random.key(self.seed),
+            n_tables=ann_l, n_bits=self.n_bits,
+        )
+        probe_k = (
+            self.recall_k if self.recall_k is not None
+            else min(2 * self.k + 2, m)
+        )
+        self._probe_k = max(1, min(int(probe_k), m))
+        probe = max(0, min(self.recall_sample, self.test_batch))
+        if spec.kind == "point":
+            from repro.kernels.sti_pipeline import make_approx_point_step
+
+            inner = make_approx_point_step(
+                self.mode, self.k, n, m, ann_w, probe, self._probe_k,
+                tuple(sorted(self.method_opts.items())),
+            )
+            self._spec = spec
+            self._state = spec.init(n)
+
+            def step(state, xs, ys, mask, xtr, ytr):
+                vec, prefix, recall = inner(
+                    state[0], xs, ys, mask, xtr, ytr, self._tables
+                )
+                self._fold_probe(prefix, recall, mask)
+                return (vec,)
+        else:
+            from repro.kernels.sti_pipeline import (
+                ApproxPairAccumulator,
+                make_approx_interaction_step,
+            )
+
+            inner = make_approx_interaction_step(
+                self.mode, self.k, n, m, ann_w, probe, self._probe_k
+            )
+            # sparse interaction state: a dense (n,) EXACT diagonal on
+            # device plus the host COO pair accumulator
+            self._spec = AccumulatorSpec("point", ("diag",), ("vector",))
+            self._state = (jnp.zeros((n,), jnp.float32),)
+            self._pairs = ApproxPairAccumulator(n)
+
+            def step(state, xs, ys, mask, xtr, ytr):
+                diag, rows, cols, vals, prefix, recall = inner(
+                    state[0], xs, ys, mask, xtr, ytr, self._tables
+                )
+                self._pairs.add(
+                    np.asarray(rows), np.asarray(cols), np.asarray(vals)
+                )
+                self._fold_probe(prefix, recall, mask)
+                return (diag,)
+
+        step.inner = inner
+        self._step = step
+        self._resolved = {
+            "fill": None, "distance": "candidates", "top_m": m,
+            "approx_exact": False, "n_tables": ann_l,
+            "n_bits": self.n_bits, "window": ann_w,
+        }
+
+    # -------------------------------------------------------- probe folding
+    def _fold_probe(self, prefix, recall, mask) -> None:
+        """Fold one step's probe rows into the running recall statistics,
+        counting only rows that correspond to REAL (unpadded) test points
+        (real rows come first; see `pad_test_batch`)."""
+        real = int(np.asarray(jnp.sum(mask)))
+        s = min(int(np.asarray(prefix).shape[0]), real)
+        if s <= 0:
+            return
+        p = np.asarray(prefix)[:s]
+        r = np.asarray(recall)[:s]
+        low = int(p.min())
+        self._prefix_min = (
+            low if self._prefix_min is None else min(self._prefix_min, low)
+        )
+        self._recall_sum += float(r.sum())
+        self._recall_rows += s
+
+    # -------------------------------------------------------------- results
+    def _finalize_arrays(self) -> dict:
+        if self._pairs is None:
+            return super()._finalize_arrays()
+        return {
+            "phi": self._pairs.to_dense(np.asarray(self._state[0]), self._t)
+        }
+
+    def _approx_meta(self) -> dict:
+        """The approx-specific result metadata: resolved m, measured recall
+        and matched prefix, and the certified error bound they imply."""
+        meta = {"top_m": self.m, "approx_exact": self._approx_exact}
+        if self.recall_target is not None:
+            meta["recall_target"] = self.recall_target
+        if self._approx_exact:
+            meta.update(
+                recall_estimate=1.0, matched_prefix=self.m, error_bound=0.0
+            )
+            if self.recall_target is not None:
+                meta["recall_target_met"] = True
+            return meta
+        recall = (
+            self._recall_sum / self._recall_rows
+            if self._recall_rows else None
+        )
+        meta.update(
+            recall_estimate=recall,
+            matched_prefix=self._prefix_min,
+            probe_k=self._probe_k,
+            probed_rows=self._recall_rows,
+        )
+        if self._prefix_min is not None:
+            from repro.core.approx import error_bound
+
+            meta["error_bound"] = error_bound(
+                self.mode, n=int(self.x_train.shape[0]), k=self.k,
+                m=self.m, prefix=self._prefix_min,
+            )
+        if self._pairs is not None:
+            meta["pairs_stored"] = self._pairs.nnz
+        if self.recall_target is not None and recall is not None:
+            meta["recall_target_met"] = bool(recall >= self.recall_target)
+        return meta
+
+    def finalize(self) -> ValuationResult:
+        """Exact-fallback or sparse finalize plus the approx metadata
+        (recall estimate, matched prefix, certified error bound)."""
+        return super().finalize().with_meta(**self._approx_meta())
+
+    # ---------------------------------------------------------- persistence
+    def _extra_config(self) -> dict:
+        return {
+            "approx": {
+                "top_m": self.m,
+                "seed": self.seed,
+                "n_tables": self._resolved.get("n_tables"),
+                "n_bits": self.n_bits,
+                "window": self._resolved.get("window"),
+                "recall_sample": self.recall_sample,
+                "recall_k": self.recall_k,
+                "recall_target": self.recall_target,
+                "exact": self._approx_exact,
+            },
+            "probe": {
+                "prefix_min": self._prefix_min,
+                "recall_sum": self._recall_sum,
+                "recall_rows": self._recall_rows,
+            },
+        }
+
+    def _checkpoint_arrays(self) -> dict:
+        arrays = super()._checkpoint_arrays()
+        if self._pairs is not None:
+            keys, vals = self._pairs.state()
+            arrays["pair_keys"] = keys
+            arrays["pair_vals"] = vals
+        return arrays
+
+    @classmethod
+    def _state_names(cls, cfg: dict) -> tuple:
+        from repro.kernels.stream_kernels import accumulator_spec
+
+        approx = cfg.get("approx", {})
+        if approx.get("exact", False):
+            return super()._state_names(cfg)
+        if accumulator_spec(cfg["mode"]).kind == "interaction":
+            return ("diag", "pair_keys", "pair_vals")
+        return super()._state_names(cfg)
+
+    @classmethod
+    def _restore_opts(cls, cfg: dict) -> dict:
+        approx = cfg.get("approx", {})
+        keys = (
+            "top_m", "seed", "n_tables", "n_bits", "window",
+            "recall_sample", "recall_k", "recall_target",
+        )
+        return {k_: approx[k_] for k_ in keys if approx.get(k_) is not None}
+
+    def _place_state(self, arrays) -> None:
+        if self._pairs is not None and len(arrays) == 3:
+            diag, keys, vals = arrays
+            self._state = (jnp.asarray(diag),)
+            self._pairs.load(keys, vals)
+            return
+        super()._place_state(arrays)
+
+    def _restore_extra(self, cfg: dict) -> None:
+        probe = cfg.get("probe", {})
+        low = probe.get("prefix_min")
+        self._prefix_min = None if low is None else int(low)
+        self._recall_sum = float(probe.get("recall_sum", 0.0))
+        self._recall_rows = int(probe.get("recall_rows", 0))

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "superdiagonal_g",
+    "superdiagonal_g_topm",
     "ranks_from_order",
     "ranks_from_distances",
     "pairwise_sq_dists",
@@ -54,25 +55,36 @@ __all__ = [
 InteractionMode = str  # "sti" | "sii"
 
 
-def _recurrence_coeffs(n: int, k: int, mode: InteractionMode, dtype) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _recurrence_coeffs(
+    n: int, k: int, mode: InteractionMode, dtype, n_total: int | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Return (last_coef, step_coef[j0]) for the g recurrence.
 
     g[n-1] = last_coef * u[n-1]
     g[j0-1] = g[j0] + step_coef[j0] * (u[j0] - u[j0-1])
     step_coef[j0] is zero unless j0 > k (paper condition j > k+1) and j0 >= 2.
+
+    `n_total` supports the truncated top-m estimator (`superdiagonal_g_topm`):
+    the step coefficients depend only on the POSITION j0 in the sorted order,
+    so they are identical whether the vector holds all n_total points or just
+    the closest n=m of them -- but the anchor term multiplies u at position
+    n_total-1, so `last_coef` must be computed from the full training-set
+    size. Defaults to n (the exact, untruncated recurrence).
     """
+    if n_total is None:
+        n_total = n
     j0 = jnp.arange(n, dtype=dtype)
     active = (j0 > k) & (j0 >= 2)
     if mode == "sti":
-        last = -2.0 * (n - k) / (n * (n - 1.0))
+        last = -2.0 * (n_total - k) / (n_total * (n_total - 1.0))
         step = jnp.where(active, 2.0 * (j0 - k) / jnp.where(active, (j0 - 1.0) * j0, 1.0), 0.0)
     elif mode == "sii":
         # SII_{n-1,n} = -u(n)/(n-1); step coefficient 1/(j-2) = 1/(j0-1).
-        last = -1.0 / (n - 1.0)
+        last = -1.0 / (n_total - 1.0)
         step = jnp.where(active, 1.0 / jnp.where(active, j0 - 1.0, 1.0), 0.0)
     else:
         raise ValueError(f"unknown interaction mode: {mode!r}")
-    if n <= k:  # valuation fully linear -> all pair interactions vanish
+    if n_total <= k:  # valuation fully linear -> all pair interactions vanish
         last = 0.0
         step = jnp.zeros_like(step)
     return jnp.asarray(last, dtype), step
@@ -104,6 +116,44 @@ def superdiagonal_g(u_sorted: jnp.ndarray, k: int, *, mode: InteractionMode = "s
         [rev_cumsum[..., 1:], jnp.zeros_like(rev_cumsum[..., :1])], axis=-1
     )
     g = last_coef * u_sorted[..., -1:] + suffix
+    return g.at[..., 0].set(0.0)
+
+
+def superdiagonal_g_topm(
+    u_topm: jnp.ndarray, k: int, n_total: int, *, mode: InteractionMode = "sti"
+) -> jnp.ndarray:
+    """Truncated-g estimator for `engine="approx"` (DESIGN.md Sec. 16).
+
+    Args:
+      u_topm: (..., m) valuation of the m CLOSEST train points only (sorted,
+        position 0 = closest) out of a full training set of `n_total`.
+      k: KNN parameter.
+      n_total: full training-set size the truncation came from.
+
+    Returns:
+      (..., m) estimate of g at positions 0..m-1, computed by running the
+      exact recurrence over the m known entries and anchoring the tail with
+      `last_coef(n_total) * u_topm[m-1]` in place of the unobservable
+      `last_coef * u[n_total-1] + sum_{m'>=m} step_coef[m'] * du[m']`. The
+      step coefficients are position-only, so every term over the matched
+      prefix is EXACT; the dropped tail is what
+      `repro.core.approx.interaction_error_bound` certifies. With m ==
+      n_total this is exactly `superdiagonal_g` (the anchor tail is the true
+      last term and the dropped sum is empty).
+    """
+    m = u_topm.shape[-1]
+    if m < 2 or n_total < 2:
+        return jnp.zeros_like(u_topm)
+    last_coef, step_coef = _recurrence_coeffs(
+        m, k, mode, u_topm.dtype, n_total=n_total
+    )
+    du = u_topm - jnp.roll(u_topm, 1, axis=-1)
+    term = step_coef * du
+    rev_cumsum = jnp.flip(jnp.cumsum(jnp.flip(term, -1), -1), -1)
+    suffix = jnp.concatenate(
+        [rev_cumsum[..., 1:], jnp.zeros_like(rev_cumsum[..., :1])], axis=-1
+    )
+    g = last_coef * u_topm[..., -1:] + suffix
     return g.at[..., 0].set(0.0)
 
 

@@ -42,13 +42,24 @@ __all__ = ["wknn_shapley_values", "distance_weights", "WEIGHT_KINDS"]
 WEIGHT_KINDS = ("rbf", "inverse", "uniform")
 
 
-def distance_weights(d2: jnp.ndarray, kind: str = "rbf") -> jnp.ndarray:
+def distance_weights(
+    d2: jnp.ndarray, kind: str = "rbf", *, sigma2: jnp.ndarray | None = None
+) -> jnp.ndarray:
     """(t, n) squared distances -> (t, n) weights in (0, 1].
 
     Row-wise deterministic (no dependence on how test points are batched),
     so streamed and one-shot runs agree bit-for-bit per test point.
+
+    `sigma2` (broadcastable to d2, typically (t, 1)) overrides the rbf
+    bandwidth. The approx engine sees only the m candidate distances per
+    row, so it cannot take the full-row mean -- instead it supplies the
+    analytically exact mean ||x - x_j||^2 over ALL n train points
+    (`repro.kernels.ann.full_mean_sq_dist`, O(d) per row), keeping approx
+    rbf weights equal to the exact engine's up to float rounding.
     """
     if kind == "rbf":
+        if sigma2 is not None:
+            return jnp.exp(-d2 / (2.0 * jnp.maximum(sigma2, 1e-12)))
         # The bandwidth is the mean over REAL columns only: soft-deleted
         # train slots (the online service's fixed-capacity mutation
         # scheme, `stream_kernels.SENTINEL_COORD`) carry squared

@@ -45,6 +45,9 @@ __all__ = [
     "distance_candidates",
     "autotune_distance",
     "best_distance",
+    "ann_candidates",
+    "autotune_ann",
+    "best_ann",
 ]
 
 _LOCK = threading.Lock()
@@ -475,3 +478,122 @@ def best_distance(
     if allow_tune:
         return autotune_distance(t, n, d, backend=backend, path=path)
     return ("pallas", {}) if backend == "tpu" else ("xla", {})
+
+
+# ------------------------------------------------------------------ ann ----
+# engine="approx" LSH index shapes: unlike the fill/distance triads, the
+# ANN stage trades SPEED against RECALL, so the tuner picks the fastest
+# (n_tables, window) whose measured candidate recall on synthetic data
+# clears _ANN_RECALL_FLOOR -- falling back to the highest-recall config if
+# none does. Keys bucket m alongside n/t ("ann_m{m}:...").
+
+_ANN_RECALL_FLOOR = 0.95
+_ANN_RECALL_K = 16
+
+
+def default_ann(n: int, m: int) -> tuple[int, int]:
+    """Heuristic (n_tables, window) for an untuned approx run: 4 tables
+    with windows sized so the pooled candidates cover 2x top_m (clamped
+    to n)."""
+    n_tables = 4
+    window = max(16, min(int(n), -(-2 * int(m) // n_tables)))
+    return n_tables, window
+
+
+def ann_candidates(n: int, m: int) -> list[tuple[int, int]]:
+    """Candidate (n_tables, window) grid for the LSH candidate stage:
+    table counts {4, 8} crossed with pool multipliers {2, 4} of top_m."""
+    cands: list[tuple[int, int]] = []
+    for n_tables in (4, 8):
+        for mult in (2, 4):
+            window = max(16, min(int(n), -(-mult * int(m) // n_tables)))
+            if (n_tables, window) not in cands:
+                cands.append((n_tables, window))
+    return cands
+
+
+def autotune_ann(
+    n: int,
+    t: int,
+    d: int,
+    m: int,
+    *,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    path: Optional[str] = None,
+) -> tuple[int, int]:
+    """Time + recall-measure the ANN candidate grid on synthetic Gaussian
+    data shaped (n, d) / (t-sample, d); persist the fastest config whose
+    recall@16 clears the floor (else the highest-recall one)."""
+    import jax.random as jrandom
+
+    from repro.kernels.ann import (
+        build_tables,
+        matched_prefix_and_recall,
+        topm_candidates,
+    )
+
+    backend = backend or jax.default_backend()
+    rng = np.random.default_rng(0)
+    ts = min(int(t), 64)
+    xn = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    xt = jnp.asarray(rng.normal(size=(ts, d)).astype(np.float32))
+    probe_k = min(_ANN_RECALL_K, int(m))
+    results: dict[str, dict] = {}
+    for n_tables, window in ann_candidates(n, m):
+        tables = build_tables(
+            xn, key=jrandom.key(0), n_tables=n_tables, n_bits=16
+        )
+        fn = jax.jit(
+            functools.partial(topm_candidates, m=int(m), window=window)
+        )
+        try:
+            us = _time_call(fn, xt, xn, tables, reps=reps)
+            cand, _, _ = fn(xt, xn, tables)
+            _, recall = matched_prefix_and_recall(cand, xt, xn, probe_k)
+            recall = float(jnp.mean(recall))
+        except Exception:  # candidate unsupported on this backend
+            continue
+        results[f"{n_tables}x{window}"] = {
+            "n_tables": n_tables, "window": window,
+            "us": us, "recall": recall,
+        }
+    if not results:
+        return default_ann(n, m)
+    good = {k_: v for k_, v in results.items()
+            if v["recall"] >= _ANN_RECALL_FLOOR}
+    pool = good or results
+    winner = min(pool, key=lambda k_: pool[k_]["us"]) if good else max(
+        pool, key=lambda k_: pool[k_]["recall"]
+    )
+    entry = dict(results[winner])
+    entry["candidates"] = results
+    entry["sample_t"] = ts
+    with _LOCK:
+        data = dict(_load(path))
+        data[_key(f"ann_m{_bucket(int(m))}_d{d}", backend, n, t)] = entry
+        _save(path, data)
+    return int(entry["n_tables"]), int(entry["window"])
+
+
+def best_ann(
+    n: int,
+    t: int,
+    d: int,
+    m: int,
+    *,
+    backend: Optional[str] = None,
+    allow_tune: bool = False,
+    path: Optional[str] = None,
+) -> tuple[int, int]:
+    """Cache hit > (optional) fresh tune > heuristic, for the approx
+    engine's (n_tables, window) LSH index shape at (n, t, d, top_m)."""
+    backend = backend or jax.default_backend()
+    entry = _load(path).get(
+        _key(f"ann_m{_bucket(int(m))}_d{d}", backend, n, t)
+    )
+    if isinstance(entry, dict) and "n_tables" in entry and "window" in entry:
+        return int(entry["n_tables"]), int(entry["window"])
+    if allow_tune:
+        return autotune_ann(n, t, d, m, backend=backend, path=path)
+    return default_ann(n, m)

@@ -14,7 +14,36 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["distance_pallas"]
+__all__ = ["distance_pallas", "candidate_sq_dists"]
+
+
+def candidate_sq_dists(
+    x_test: jnp.ndarray,
+    x_train: jnp.ndarray,
+    cand: jnp.ndarray,
+    *,
+    train_norms: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """(tb, d) test rows, (n, d) train set, (tb, P) candidate ids ->
+    (tb, P) exact squared L2 distances to the candidates only.
+
+    The sparse counterpart of the dense (t, n) distance row: same
+    expansion ||a-b||^2 = ||a||^2 - 2 a.b + ||b||^2, but the cross term is
+    a gathered row-wise contraction costing O(tb P d) instead of
+    O(tb n d). `train_norms` (n,) may be precomputed once per train set
+    (the LSH index caches it); otherwise norms are taken over the gathered
+    rows. Used by `repro.kernels.ann.topm_candidates` -- the candidate
+    stage of `engine="approx"` (DESIGN.md Sec. 16).
+    """
+    xt = x_test.astype(jnp.float32)
+    rows = x_train.astype(jnp.float32)[cand]           # (tb, P, d)
+    cross = jnp.einsum("td,tpd->tp", xt, rows)
+    nt = jnp.sum(xt * xt, axis=-1, keepdims=True)      # (tb, 1)
+    if train_norms is not None:
+        nn = train_norms.astype(jnp.float32)[cand]     # (tb, P)
+    else:
+        nn = jnp.sum(rows * rows, axis=-1)
+    return jnp.maximum(nt - 2.0 * cross + nn, 0.0)
 
 
 def _kernel(xt_ref, xn_ref, nt_ref, nn_ref, out_ref, *, n_dblocks):

@@ -74,6 +74,9 @@ __all__ = [
     "prepare_fused_step",
     "pad_test_batch",
     "make_point_step",
+    "make_approx_point_step",
+    "make_approx_interaction_step",
+    "ApproxPairAccumulator",
     "make_rank_step",
     "make_refold_step",
     "prepare_refold_step",
@@ -589,6 +592,224 @@ def fused_sti_knn_interactions(
         acc, diag = step(acc, diag, xb, yb, mask, x_train, y_train)
     phi = acc / t
     return jnp.fill_diagonal(phi, diag / t, inplace=False)
+
+
+# ------------------------------------------------------------------- approx
+# engine="approx" (DESIGN.md Sec. 16): the steps below swap the dense
+# (tb, n) distance row for the LSH candidate stage
+# (`repro.kernels.ann.topm_candidates`), run the per-method recurrences on
+# the (tb, m) candidate vectors (already sorted by exact distance, so
+# candidate position == sorted coordinate), and land the results sparsely:
+# a scatter-add for the (n,) point accumulators, flattened COO triplets
+# for the interaction pairs (merged deterministically on the host by
+# `ApproxPairAccumulator` so n=10^6 stores only pairs that ever co-occur
+# in a candidate set). Each step also runs the recall probe on its first
+# `probe` rows -- the measured matched prefix feeds the certified bounds
+# of `repro.core.approx`.
+
+
+def _probe_stats(probe: int, probe_k: int) -> Callable:
+    """Bind the in-step recall probe: `run(cand, xb, x_train)` returns the
+    (min(probe, tb),) matched-prefix and recall rows via
+    `repro.kernels.ann.matched_prefix_and_recall` (empty arrays when
+    probing is disabled). Probing the FIRST rows is sound because
+    `pad_test_batch` puts real test points first."""
+    from repro.kernels.ann import matched_prefix_and_recall
+
+    def run(cand, xb, x_train):
+        s = min(int(probe), cand.shape[0])
+        if s <= 0:
+            return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32))
+        return matched_prefix_and_recall(
+            cand[:s], xb[:s], x_train, int(probe_k)
+        )
+
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def make_approx_point_step(
+    method: str,
+    k: int,
+    n: int,
+    m: int,
+    window: int,
+    probe: int = 0,
+    probe_k: int = 0,
+    method_static: tuple = (),
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Build the jitted approx step for a point-value method:
+
+        step(vec, xb, yb, mask, x_train, y_train, tables)
+            -> (vec, prefix, recall)
+
+    vec (n,) f32 accumulates scatter-added candidate values (donated
+    off-CPU like the dense steps); `tables` is the `LSHTables` pytree the
+    session built once per train set. Per batch: candidate top-m gather ->
+    label match -> candidate-space recurrence
+    (`stream_kernels.make_approx_values`) -> O(tb m) scatter-add, plus the
+    `probe`-row recall probe (prefix/recall returned to the host caller).
+    O(tb (L log n + L W d + m log m)) per batch instead of O(tb n d).
+    Cached per static configuration.
+    """
+    from repro.kernels.ann import full_mean_sq_dist, topm_candidates
+    from repro.kernels.stream_kernels import (
+        make_approx_values,
+        scatter_point_update,
+    )
+
+    values_fn = make_approx_values(method, k, opts=dict(method_static))
+    probe_fn = _probe_stats(probe, probe_k)
+    n, m, window = int(n), int(m), int(window)
+
+    def step(vec, xb, yb, mask, x_train, y_train, tables):
+        cand, d2m, valid = topm_candidates(xb, x_train, tables, m, window)
+        match = (y_train[cand] == yb[:, None]).astype(jnp.float32)
+        sigma2 = full_mean_sq_dist(xb, tables)
+        vals = values_fn(d2m, match, valid, mask, sigma2)
+        vec = scatter_point_update(vec, cand, vals, valid)
+        prefix, recall = probe_fn(cand, xb, x_train)
+        return vec, prefix, recall
+
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+@functools.lru_cache(maxsize=None)
+def make_approx_interaction_step(
+    mode: InteractionMode,
+    k: int,
+    n: int,
+    m: int,
+    window: int,
+    probe: int = 0,
+    probe_k: int = 0,
+    donate: Optional[bool] = None,
+) -> Callable:
+    """Build the jitted approx step for "sti"/"sii" interactions:
+
+        step(diag, xb, yb, mask, x_train, y_train, tables)
+            -> (diag, rows, cols, vals, prefix, recall)
+
+    The DIAGONAL (paper Eq. 4: mean of u, a label comparison only) is
+    accumulated exactly and densely -- it needs no distances at all. The
+    off-diagonal pairs run the truncated recurrence
+    (`repro.core.sti_knn.superdiagonal_g_topm`) on the (tb, m) candidate
+    vector and come back as flattened (tb m^2,) COO triplets: pair value
+    g[max(pos_a, pos_b)] gathered over candidate positions, with padded
+    rows, invalid slots and the diagonal redirected to row index n (the
+    host accumulator drops them). Peak step memory is O(tb m^2), so m
+    bounds the quadratic term instead of n. Cached per static config.
+    """
+    from repro.core.sti_knn import superdiagonal_g_topm
+    from repro.kernels.ann import topm_candidates
+
+    probe_fn = _probe_stats(probe, probe_k)
+    n, m, window = int(n), int(m), int(window)
+
+    def step(diag, xb, yb, mask, x_train, y_train, tables):
+        cand, d2m, valid = topm_candidates(xb, x_train, tables, m, window)
+        match = (y_train[cand] == yb[:, None]).astype(jnp.float32)
+        u = match * valid * (mask / k)[:, None]
+        g = superdiagonal_g_topm(u, k, n, mode=mode)       # (tb, m)
+        pos = jnp.arange(m)
+        gm = g[:, jnp.maximum(pos[:, None], pos[None, :])]  # (tb, m, m)
+        ok = (
+            (valid[:, :, None] > 0)
+            & (valid[:, None, :] > 0)
+            & (pos[:, None] != pos[None, :])[None, :, :]
+            & (mask > 0)[:, None, None]
+        )
+        rows = jnp.where(ok, cand[:, :, None], n)
+        cols = jnp.where(ok, cand[:, None, :], n)
+        vals = jnp.where(ok, gm, 0.0)
+        # exact dense diagonal: mean-of-u main terms need only the labels
+        dm = (y_train[None, :] == yb[:, None]).astype(jnp.float32)
+        diag = diag + jnp.sum(dm * (mask / k)[:, None], axis=0)
+        prefix, recall = probe_fn(cand, xb, x_train)
+        return (
+            diag,
+            rows.reshape(-1).astype(jnp.int32),
+            cols.reshape(-1).astype(jnp.int32),
+            vals.reshape(-1),
+            prefix,
+            recall,
+        )
+
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+
+class ApproxPairAccumulator:
+    """Host-side deterministic COO accumulator for approx interactions.
+
+    Each approx interaction step emits (tb m^2,) flattened (row, col, val)
+    triplets; this class merges them into a sorted unique key list
+    (key = row * n + col, int64) with `np.unique` + `np.add.at` -- a
+    sequential, order-stable reduction, so two identical runs (and a
+    checkpoint/restore) produce bit-identical sparse states regardless of
+    device scatter ordering. Memory is O(pairs that ever co-occur in a
+    candidate set), the whole point of the sparse approx path: STI at
+    n=10^6 never materializes an (n, n) accumulator.
+    """
+
+    def __init__(self, n: int):
+        """Empty accumulator for an n-point training set."""
+        import numpy as np
+
+        self.n = int(n)
+        self._keys = np.zeros((0,), np.int64)
+        self._vals = np.zeros((0,), np.float32)
+
+    @property
+    def nnz(self) -> int:
+        """Number of distinct off-diagonal pairs stored so far."""
+        return int(self._keys.shape[0])
+
+    def add(self, rows, cols, vals) -> None:
+        """Merge one step's flattened triplets; entries with row >= n (the
+        step's invalid/diagonal redirect) are dropped."""
+        import numpy as np
+
+        rows = np.asarray(rows)
+        cols = np.asarray(cols)
+        vals = np.asarray(vals, np.float32)
+        keep = rows < self.n
+        new = rows[keep].astype(np.int64) * self.n + cols[keep].astype(
+            np.int64
+        )
+        keys = np.concatenate([self._keys, new])
+        allv = np.concatenate([self._vals, vals[keep]])
+        uniq, inv = np.unique(keys, return_inverse=True)
+        acc = np.zeros(uniq.shape[0], np.float32)
+        np.add.at(acc, inv.reshape(-1), allv)
+        self._keys, self._vals = uniq, acc
+
+    def state(self) -> tuple:
+        """(keys, vals) checkpoint arrays (sorted int64 keys, f32 sums)."""
+        return self._keys.copy(), self._vals.copy()
+
+    def load(self, keys, vals) -> None:
+        """Restore from `state()` arrays (checkpoint resume)."""
+        import numpy as np
+
+        self._keys = np.asarray(keys, np.int64).copy()
+        self._vals = np.asarray(vals, np.float32).copy()
+
+    def to_dense(self, diag, t: int):
+        """Densify into the (n, n) f32 interaction matrix: off-diagonal
+        sums / t with the exactly-accumulated diagonal / t on the main
+        diagonal -- the same finalize rule as
+        `AccumulatorSpec.result_arrays`."""
+        import numpy as np
+
+        phi = np.zeros((self.n, self.n), np.float32)
+        phi[self._keys // self.n, self._keys % self.n] = self._vals / t
+        np.fill_diagonal(phi, np.asarray(diag, np.float32) / t)
+        return jnp.asarray(phi)
 
 
 # ------------------------------------------------------------------ sharded

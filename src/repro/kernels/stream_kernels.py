@@ -67,6 +67,9 @@ __all__ = [
     "compact_order",
     "register_refold_builder",
     "make_refold_kernel",
+    "approx_point_methods",
+    "make_approx_values",
+    "scatter_point_update",
 ]
 
 # Soft-delete sentinels for fixed-capacity training sets (the online
@@ -452,6 +455,82 @@ def _masked_refold_builder(kernel: UpdateKernel, k: int) -> Callable:
 
 register_refold_builder("interaction", _masked_refold_builder)
 register_refold_builder("point", _masked_refold_builder)
+
+
+# ------------------------------------------------------ approx (candidate)
+# engine="approx" (DESIGN.md Sec. 16) replaces the dense (tb, n) sorted
+# pipeline with the (tb, m) CANDIDATE vectors from the LSH stage
+# (`repro.kernels.ann.topm_candidates`): candidates arrive already sorted
+# by exact distance, so candidate position IS the sorted coordinate and the
+# per-method recurrences below are the exact recurrences truncated to the
+# top m -- the certified-error estimators of `repro.core.approx`. Results
+# land in the (n,) accumulator via a single scatter-add per batch.
+
+
+def approx_point_methods() -> tuple[str, ...]:
+    """Point methods with a candidate-space (engine="approx") value path."""
+    return ("knn_shapley", "wknn", "loo")
+
+
+def make_approx_values(method: str, k: int, *, opts: Optional[dict] = None
+                       ) -> Callable:
+    """Build the candidate-space value closure for a point method.
+
+    Returns `values(d2m, match, valid, mask, sigma2) -> (tb, m)`: per-test
+    values of each CANDIDATE at its candidate position, with the validity
+    mask (`valid` marks real distinct candidates, `mask` real test rows)
+    folded in so every dropped slot and padded row contributes exactly
+    zero. `sigma2` is the (tb, 1) analytic rbf bandwidth
+    (`repro.kernels.ann.full_mean_sq_dist`; ignored by non-rbf methods).
+    The closures are the train-coordinate `_point_factory` value functions
+    restricted to the m nearest positions: knn_shapley/wknn run the
+    reverse-cumsum recurrence on the truncated vector, loo slides the
+    (k+1)-th CANDIDATE in (exact once the matched prefix covers k+1).
+    """
+    opts = dict(opts or {})
+    k = int(k)
+    if method == "knn_shapley":
+        def values(d2m, match, valid, mask, sigma2):
+            from repro.core.knn_shapley import knn_shapley_from_sorted
+
+            u = match * valid * mask[:, None]
+            return knn_shapley_from_sorted(u, k)
+    elif method == "wknn":
+        kind = opts.get("weights", "rbf")
+
+        def values(d2m, match, valid, mask, sigma2):
+            from repro.core.knn_shapley import knn_shapley_from_sorted
+            from repro.core.wknn import distance_weights
+
+            w = distance_weights(d2m, kind, sigma2=sigma2)
+            u = w * match * valid * mask[:, None]
+            return knn_shapley_from_sorted(u, k)
+    elif method == "loo":
+        def values(d2m, match, valid, mask, sigma2):
+            u = match * valid * mask[:, None]
+            m = u.shape[-1]
+            nxt = u[..., k:k + 1] if m > k else jnp.zeros_like(u[..., :1])
+            in_window = (jnp.arange(m) < k)[None, :]
+            return jnp.where(in_window, (u - nxt) / k, 0.0)
+    else:
+        raise ValueError(
+            f"no approx candidate-space kernel for method {method!r}; "
+            f"available: {approx_point_methods()}"
+        )
+    return values
+
+
+def scatter_point_update(vec: jnp.ndarray, cand: jnp.ndarray,
+                         vals: jnp.ndarray, valid: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Scatter-add (tb, m) candidate-coordinate values into the (n,)
+    accumulator: the sparse O(tb m) twin of the dense point update's
+    O(tb n) rank gather + sum. Invalid candidate slots are redirected to
+    the out-of-bounds index n and dropped by the scatter (`mode="drop"`),
+    so no branch is needed in the jitted step."""
+    n = vec.shape[0]
+    idx = jnp.where(valid > 0, cand, n)
+    return vec.at[idx.reshape(-1)].add(vals.reshape(-1), mode="drop")
 
 
 register_update_kernel("sti", INTERACTION_STATE, _interaction_factory("sti"))

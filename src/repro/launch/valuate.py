@@ -11,6 +11,9 @@ computation through a `ValuationSession` in test-batch increments to
 exercise the constant-memory online path -- for EVERY method with a
 streaming kernel (interactions and per-point values alike), and
 `--engine sharded --stream` opens the multi-device sharded session.
+`--engine approx [--top-m M --recall-target R]` runs the LSH top-m
+approximate engine (certified error bound + measured recall in result
+meta; `--top-m >= n` is bit-for-bit the exact engine).
 `--resilient` (implies --stream) drives the same fold through the
 fault-tolerant `ResilientValuationSession`: StepGuard retries with
 backoff, periodic atomic checkpoints under `--ckpt-dir` every
@@ -45,8 +48,16 @@ def main():
                     help="execution engine; default = the method's first "
                          "ENGINES entry (repro.core.methods.ENGINES). "
                          "Interaction methods: fused | scan | distributed "
-                         "| sharded. Point methods: streamed | eager | "
-                         "sharded | oracle (oracle: parity only, n <= 16)")
+                         "| sharded | approx. Point methods: streamed | "
+                         "eager | sharded | approx | oracle (oracle: parity "
+                         "only, n <= 16)")
+    ap.add_argument("--top-m", type=int, default=None,
+                    help="candidate-set size for --engine approx (LSH top-m "
+                         "preselection; default n/4 clamped to [k+1, n]; "
+                         "--top-m >= n runs the exact engine bit-for-bit)")
+    ap.add_argument("--recall-target", type=float, default=None,
+                    help="for --engine approx: record whether the measured "
+                         "candidate recall met this target in result meta")
     ap.add_argument("--shards", type=int, default=None,
                     help="device count for --engine sharded (default: all "
                          "local devices, clamped to a divisor of n)")
@@ -103,10 +114,14 @@ def main():
     # forward only the CLI options this method accepts (registry dispatch:
     # new methods appear here without launcher edits)
     accepted = getattr(method, "accepted_options", frozenset())
+    if args.engine == "approx" and args.top_m is None:
+        # a demo-friendly default: real preselection, never below k+1
+        args.top_m = max(args.k + 1, args.n // 4)
     opts = {name: value for name, value in dict(
         engine=args.engine, fill=args.fill, test_batch=args.test_batch,
         autotune=args.autotune, shards=args.shards,
-        weights=args.weights).items()
+        weights=args.weights, top_m=args.top_m,
+        recall_target=args.recall_target).items()
         if name in accepted and value is not None}
     # streaming runs through a ValuationSession (sharded when --engine
     # sharded): every built-in method has a streaming kernel; a custom
@@ -118,7 +133,7 @@ def main():
         print(f"note: method {args.method} has no streaming kernel; "
               f"running one-shot")
     elif args.stream and args.engine not in (None, "fused", "streamed",
-                                             "sharded"):
+                                             "sharded", "approx"):
         print(f"note: --stream folds the session step; "
               f"--engine {args.engine} ignored")
     t0 = time.time()
@@ -155,6 +170,12 @@ def main():
                     **kw)
         elif args.engine == "sharded":
             sess = ShardedValuationSession(x, y, shards=args.shards, **kw)
+        elif args.engine == "approx":
+            from repro.core.session import ApproxValuationSession
+
+            sess = ApproxValuationSession(
+                x, y, top_m=args.top_m, recall_target=args.recall_target,
+                **kw)
         else:
             sess = ValuationSession(x, y, **kw)
         for start in range(0, args.t, args.test_batch):

@@ -1,8 +1,10 @@
-"""Skip-only stand-ins for `hypothesis` when it is not installed.
+"""Skip-only stand-ins for `hypothesis` for OFFLINE environments.
 
-`hypothesis` is an optional dev dependency (see requirements.txt): the
-property-based tests skip cleanly without it instead of failing the whole
-module at collection time. Usage in test modules:
+`hypothesis` is a real test dependency (requirements.txt) and CI always
+installs it; this shim exists only so the suite still collects and the
+non-property tests still run in air-gapped containers where it cannot be
+installed -- property-based tests skip cleanly instead of failing the
+whole module at collection time. Usage in test modules:
 
     try:
         from hypothesis import given, settings, strategies as st

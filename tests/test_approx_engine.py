@@ -1,0 +1,268 @@
+"""Certified-error parity harness for the approximate top-m engine.
+
+Three contracts, each tested through the public registry AND the session
+layer:
+
+  1. m = n is NOT "approximately exact": `engine="approx"` with
+     `top_m >= n` must dispatch to the exact engine and match it
+     bit-for-bit (same executable, same floats).
+  2. m < n is certified: for every run the measured matched-prefix /
+     recall probe implies an error bound (repro.core.approx), and the
+     true max error against the exact engine must sit under that bound.
+  3. The engine is deterministic: identical seeds give bit-identical
+     results, and a mid-stream checkpoint/restore continues to the same
+     bits (sparse COO state and probe statistics included).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: skip property-based tests
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core import ApproxValuationSession, ENGINES, get_method
+from repro.core.approx import (
+    error_bound, harmonic_number, point_coef, shapley_tail, step_coef_sum)
+
+# one canonical geometry shared across tests so the lru-cached jitted steps
+# compile once per module, not once per test
+N, D, T, K, M = 192, 6, 48, 5, 96
+APPROX_PARAMS = dict(window=96, n_tables=8, recall_sample=T, recall_k=64)
+
+POINT_METHODS = ("knn_shapley", "wknn", "loo")
+INTERACTION_METHODS = ("sti", "sii")
+# exact comparison engine per method family
+EXACT_ENGINE = {**{m: "fused" for m in INTERACTION_METHODS},
+                **{m: "streamed" for m in POINT_METHODS}}
+# absolute slack on top of the certified bound: wknn's approx path uses the
+# analytic O(d) rbf bandwidth identity (exact up to ~1e-7 relative
+# rounding); scatter-add orderings may differ by an ulp elsewhere
+SLACK = {"wknn": 1e-5}
+
+
+def _data(seed=0, n=N, t=T, d=D, classes=3):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, d)).astype(np.float32),
+            rng.integers(0, classes, size=n).astype(np.int32),
+            rng.normal(size=(t, d)).astype(np.float32),
+            rng.integers(0, classes, size=t).astype(np.int32))
+
+
+def _result_array(res):
+    return np.asarray(res.phi if res.phi is not None else res.point_values)
+
+
+def _run(method, engine, data, **opts):
+    xtr, ytr, xte, yte = data
+    return get_method(method)(xtr, ytr, xte, yte, k=K,
+                              engine=engine, test_batch=T, **opts)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _data()
+
+
+# ----------------------------------------------------- engines-table wiring
+def test_engines_table_has_approx_everywhere():
+    for method in (*INTERACTION_METHODS, *POINT_METHODS):
+        assert "approx" in ENGINES[method]
+
+
+@pytest.mark.parametrize("method,engine",
+                         [("sti", "fused"), ("knn_shapley", "streamed")])
+def test_approx_options_rejected_off_engine(method, engine, data):
+    with pytest.raises(ValueError, match="approx"):
+        _run(method, engine, data, top_m=M)
+
+
+def test_top_m_below_k_plus_one_rejected(data):
+    xtr, ytr = data[0], data[1]
+    with pytest.raises(ValueError, match="top_m"):
+        ApproxValuationSession(xtr, ytr, k=K, mode="knn_shapley",
+                               top_m=K, test_batch=T)
+
+
+# -------------------------------------------- contract 1: m=n bit-identity
+@pytest.mark.parametrize("method", (*INTERACTION_METHODS, *POINT_METHODS))
+def test_full_m_is_bit_identical_to_exact(method, data):
+    r_exact = _run(method, EXACT_ENGINE[method], data)
+    r_full = _run(method, "approx", data, top_m=N)
+    assert r_full.meta["approx_exact"] is True
+    assert r_full.meta["error_bound"] == 0.0
+    assert np.array_equal(_result_array(r_exact), _result_array(r_full))
+
+
+# ----------------------------------------- contract 2: m<n certified bound
+@pytest.mark.parametrize("method", (*INTERACTION_METHODS, *POINT_METHODS))
+def test_truncated_m_error_within_certified_bound(method, data):
+    r_exact = _run(method, EXACT_ENGINE[method], data)
+    r_ap = _run(method, "approx", data, top_m=M,
+                approx_params=APPROX_PARAMS)
+    meta = r_ap.meta
+    assert meta["approx_exact"] is False and meta["top_m"] == M
+    assert 0.0 <= meta["recall_estimate"] <= 1.0
+    assert meta["probed_rows"] == T  # recall_sample=T: every row certified
+    err = float(np.max(np.abs(_result_array(r_exact) - _result_array(r_ap))))
+    assert err <= meta["error_bound"] + SLACK.get(method, 1e-6), (
+        f"{method}: err {err} > certified bound {meta['error_bound']}")
+
+
+def test_interaction_matrix_symmetric_and_diag_exact(data):
+    r_exact = _run("sti", "fused", data)
+    r_ap = _run("sti", "approx", data, top_m=M, approx_params=APPROX_PARAMS)
+    phi = _result_array(r_ap)
+    assert np.array_equal(phi, phi.T)
+    # the approx diagonal is computed exactly from labels, never truncated
+    np.testing.assert_array_equal(np.diag(phi),
+                                  np.diag(_result_array(r_exact)))
+
+
+def test_recall_target_reported(data):
+    r = _run("knn_shapley", "approx", data, top_m=M, recall_target=0.5,
+             approx_params=APPROX_PARAMS)
+    assert r.meta["recall_target"] == 0.5
+    assert r.meta["recall_target_met"] == (r.meta["recall_estimate"] >= 0.5)
+
+
+# --------------------------------------------- contract 3: determinism
+@pytest.mark.parametrize("method", ("sti", "knn_shapley"))
+def test_two_runs_bit_identical(method, data):
+    runs = [_run(method, "approx", data, top_m=M, seed=7,
+                 approx_params=APPROX_PARAMS) for _ in range(2)]
+    assert np.array_equal(_result_array(runs[0]), _result_array(runs[1]))
+    for key in ("recall_estimate", "matched_prefix", "error_bound"):
+        assert runs[0].meta[key] == runs[1].meta[key]
+
+
+@pytest.mark.parametrize("mode", ("sti", "knn_shapley"))
+def test_checkpoint_restore_bit_identical(mode, data, tmp_path):
+    xtr, ytr, xte, yte = data
+    kw = dict(k=K, mode=mode, test_batch=16, top_m=64, seed=7,
+              window=64, n_tables=4, recall_sample=16)
+
+    straight = ApproxValuationSession(xtr, ytr, **kw)
+    straight.update(xte, yte)
+    r_straight = straight.finalize()
+
+    first = ApproxValuationSession(xtr, ytr, **kw)
+    first.update(xte[:32], yte[:32])
+    first.checkpoint(tmp_path / "ck")
+    resumed = ApproxValuationSession.restore(tmp_path / "ck", xtr, ytr)
+    resumed.update(xte[32:], yte[32:])
+    r_resumed = resumed.finalize()
+
+    assert np.array_equal(_result_array(r_straight),
+                          _result_array(r_resumed))
+    for key in ("recall_estimate", "matched_prefix", "error_bound"):
+        assert r_straight.meta[key] == r_resumed.meta[key]
+
+
+# ------------------------------------------------ bound-math properties
+def test_harmonic_number_matches_direct_sum():
+    for x in (1, 2, 7, 100, 4096):
+        direct = float(np.sum(1.0 / np.arange(1, x + 1)))
+        assert abs(harmonic_number(x) - direct) < 1e-10
+
+
+def test_point_bound_monotone_in_prefix():
+    bounds = [error_bound("knn_shapley", n=1024, k=5, m=256, prefix=p)
+              for p in range(0, 257, 16)]
+    assert all(b >= 0 for b in bounds)
+    assert all(b1 >= b2 - 1e-15 for b1, b2 in zip(bounds, bounds[1:]))
+
+
+def test_interaction_bound_monotone_in_prefix():
+    bounds = [error_bound("sti", n=1024, k=5, m=256, prefix=p)
+              for p in range(0, 257, 16)]
+    assert all(b >= 0 for b in bounds)
+    assert all(b1 >= b2 - 1e-15 for b1, b2 in zip(bounds, bounds[1:]))
+
+
+def test_loo_bound_zero_once_prefix_covers_k_plus_one():
+    assert error_bound("loo", n=512, k=5, m=64, prefix=K + 1) == 0.0
+    assert error_bound("loo", n=512, k=5, m=64, prefix=K) > 0.0
+
+
+def test_tail_sums_match_direct_enumeration():
+    n, k = 200, 5
+    for a in (1, 3, k, k + 1, 50, n):
+        direct = float(sum(point_coef(i, k) for i in range(a, n + 1)))
+        assert abs(shapley_tail(a, n, k) - direct) < 1e-10
+    for mode in ("sti", "sii"):
+        for a, b in ((0, 10), (3, 100), (k, n - 1)):
+            j0s = range(max(a, max(k + 1, 2)), b + 1)
+            if mode == "sti":
+                direct = float(sum(2.0 * (j - k) / ((j - 1) * j)
+                                   for j in j0s))
+            else:
+                direct = float(sum(1.0 / (j - 1) for j in j0s))
+            assert abs(step_coef_sum(a, b, k, mode) - direct) < 1e-10
+
+
+# --------------------------------------------- randomized parity (hypothesis)
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 6),
+       m=st.sampled_from((64, 96, 128)))
+def test_point_bound_holds_random(seed, k, m):
+    """knn_shapley parity on random folds: err <= certified bound, and
+    top_m >= n stays bit-identical -- any (seed, k, m)."""
+    xtr, ytr, xte, yte = _data(seed=seed, n=160, t=32)
+    method = get_method("knn_shapley")
+    r_exact = method(xtr, ytr, xte, yte, k=k, engine="streamed",
+                     test_batch=32)
+    r_ap = method(xtr, ytr, xte, yte, k=k, engine="approx", test_batch=32,
+                  top_m=m, seed=seed % 97,
+                  approx_params=dict(window=m, n_tables=8,
+                                     recall_sample=32, recall_k=64))
+    err = float(np.max(np.abs(np.asarray(r_exact.point_values)
+                              - np.asarray(r_ap.point_values))))
+    assert err <= r_ap.meta["error_bound"] + 1e-6
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(2, 6))
+def test_interaction_bound_holds_random(seed, k):
+    xtr, ytr, xte, yte = _data(seed=seed, n=160, t=32)
+    method = get_method("sti")
+    r_exact = method(xtr, ytr, xte, yte, k=k, engine="fused", test_batch=32)
+    r_ap = method(xtr, ytr, xte, yte, k=k, engine="approx", test_batch=32,
+                  top_m=96,
+                  approx_params=dict(window=96, n_tables=8,
+                                     recall_sample=32, recall_k=64))
+    err = float(jnp.max(jnp.abs(r_exact.phi - r_ap.phi)))
+    assert err <= r_ap.meta["error_bound"] + 1e-6
+
+
+# --------------------------------------------------------- slow sweep (CI)
+@pytest.mark.slow
+@pytest.mark.parametrize("method", ("sti", "knn_shapley", "wknn"))
+def test_recall_error_sweep_larger_n(method):
+    """n=1024 sweep over top-m: the certified bound holds at EVERY
+    truncation level, and the true error shrinks toward exactness as m
+    grows (excluded from tier-1 via the `slow` marker). The bound itself
+    need not be monotone in m for interactions: the within-candidate-set
+    term S(prefix, m-1) covers MORE admissible misplacement mass as the
+    candidate window widens."""
+    data = _data(seed=3, n=1024, t=64, d=16)
+    r_exact = _run_sweep(method, data, engine=EXACT_ENGINE[method])
+    errs = []
+    for m in (128, 256, 512):
+        r_ap = _run_sweep(method, data, engine="approx", top_m=m,
+                          approx_params=dict(window=m, n_tables=8,
+                                             recall_sample=64,
+                                             recall_k=128))
+        err = float(np.max(np.abs(_result_array(r_exact)
+                                  - _result_array(r_ap))))
+        assert err <= r_ap.meta["error_bound"] + SLACK.get(method, 1e-6)
+        errs.append(err)
+    assert errs[-1] <= errs[0] + SLACK.get(method, 1e-6)
+
+
+def _run_sweep(method, data, engine, **opts):
+    xtr, ytr, xte, yte = data
+    return get_method(method)(xtr, ytr, xte, yte, k=K, engine=engine,
+                              test_batch=64, **opts)

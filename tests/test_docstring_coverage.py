@@ -18,9 +18,10 @@ SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
 # The documented public surface (ISSUE 4 satellite; extended by ISSUE 5
 # with the method-generic streaming engine modules, by ISSUE 6 with
 # the resilient runtime, by ISSUE 7 with the reprolint analysis
-# subsystem, and by ISSUE 8 with the online valuation service): the
-# valuation API, the streaming pipelines/kernels, the sharding helpers,
-# the fault-tolerance layer, and the static-analysis front door.
+# subsystem, by ISSUE 8 with the online valuation service, and by
+# ISSUE 9 with the approximate top-m engine): the valuation API, the
+# streaming pipelines/kernels, the sharding helpers, the fault-tolerance
+# layer, and the static-analysis front door.
 PUBLIC_MODULES = [
     "analysis/__init__.py",
     "analysis/findings.py",
@@ -33,11 +34,13 @@ PUBLIC_MODULES = [
     "core/results.py",
     "core/resilient.py",
     "core/sti_knn.py",
+    "core/approx.py",
     "core/knn_shapley.py",
     "core/wknn.py",
     "core/loo.py",
     "kernels/sti_pipeline.py",
     "kernels/sti_fill.py",
+    "kernels/ann.py",
     "kernels/stream_kernels.py",
     "kernels/autotune.py",
     "distributed/sharding.py",

@@ -10,6 +10,7 @@ except ModuleNotFoundError:  # optional dep: skip property-based tests
     from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import ModelConfig, init_params
+from repro.core import get_method
 from repro.core.sti_knn import superdiagonal_g
 from repro.models import ssm as S
 
@@ -129,6 +130,106 @@ def test_moe_identical_tokens_get_identical_outputs():
     np.testing.assert_allclose(np.asarray(out[0]),
                                np.tile(np.asarray(first), (8, 1)),
                                rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------- Shapley axioms (exact + approx engines)
+_AX = dict(n=160, t=32, d=6, k=5)
+_APPROX = dict(top_m=96, approx_params=dict(window=96, n_tables=8,
+                                            recall_sample=32, recall_k=64))
+
+
+def _axiom_data(seed=11, null_player=False, duplicate=False):
+    """Gaussian fold; optionally append a NULL PLAYER (farther than every
+    other train point from every test point, label matching no test label
+    -> v(S+i) = v(S) for ALL S) or an exact DUPLICATE of train point 0."""
+    rng = np.random.default_rng(seed)
+    n, t, d = _AX["n"], _AX["t"], _AX["d"]
+    xtr = rng.normal(size=(n, d)).astype(np.float32)
+    ytr = rng.integers(0, 3, size=n).astype(np.int32)
+    xte = rng.normal(size=(t, d)).astype(np.float32)
+    yte = rng.integers(0, 3, size=t).astype(np.int32)
+    if null_player:
+        xtr = np.concatenate([xtr, np.full((1, d), 50.0, np.float32)])
+        ytr = np.concatenate([ytr, np.int32([3])])  # label absent from yte
+    if duplicate:
+        xtr = np.concatenate([xtr, xtr[:1]])
+        ytr = np.concatenate([ytr, ytr[:1]])
+    return xtr, ytr, xte, yte
+
+
+def _likelihood_vn(xtr, ytr, xte, yte, k):
+    """The paper's v(N): mean over test points of (matching labels in the
+    true top-k) / k."""
+    from repro.core.sti_baseline import sorted_orders
+    orders = sorted_orders(xtr, xte)
+    return float(np.mean([
+        np.sum(ytr[orders[p, :k]] == yte[p]) / k for p in range(len(yte))]))
+
+
+@pytest.mark.parametrize("method,engine", [
+    ("knn_shapley", "streamed"), ("loo", None), ("sti", "fused")])
+def test_efficiency_axiom_exact_engines(method, engine):
+    """sum(values) == v(N) for Shapley methods (LOO instead telescopes to
+    v(N) - v(N\\{i}) sums, so only finiteness is asserted there)."""
+    xtr, ytr, xte, yte = _axiom_data()
+    opts = {"engine": engine} if engine else {}
+    res = get_method(method)(xtr, ytr, xte, yte, k=_AX["k"], **opts)
+    v_n = _likelihood_vn(xtr, ytr, xte, yte, _AX["k"])
+    if method == "loo":
+        assert np.isfinite(np.asarray(res.values())).all()
+    else:
+        assert float(res.efficiency_gap(v_n)) < 5e-4
+
+
+def test_efficiency_axiom_approx_within_bound():
+    """The approx engine may miss tail mass, but never more than n times
+    the per-entry certified bound."""
+    xtr, ytr, xte, yte = _axiom_data()
+    k = _AX["k"]
+    v_n = _likelihood_vn(xtr, ytr, xte, yte, k)
+    method = get_method("knn_shapley")
+    exact_gap = float(method(xtr, ytr, xte, yte, k=k,
+                             engine="streamed").efficiency_gap(v_n))
+    res = method(xtr, ytr, xte, yte, k=k, engine="approx", **_APPROX)
+    slack = len(xtr) * (res.meta["error_bound"] + 1e-6)
+    assert float(res.efficiency_gap(v_n)) <= exact_gap + slack
+
+
+@pytest.mark.parametrize("engine", ["fused", "approx"])
+def test_interaction_symmetry_axiom(engine):
+    """phi_ij == phi_ji on every engine (the approx COO accumulator emits
+    both orientations of each candidate pair, so it is exactly symmetric)."""
+    xtr, ytr, xte, yte = _axiom_data()
+    opts = _APPROX if engine == "approx" else {}
+    phi = np.asarray(get_method("sti")(
+        xtr, ytr, xte, yte, k=_AX["k"], engine=engine, **opts).phi)
+    np.testing.assert_allclose(phi, phi.T, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", ["knn_shapley", "wknn", "loo", "sti"])
+@pytest.mark.parametrize("approx", [False, True])
+def test_null_player_axiom(method, approx):
+    """A point farther than all others from every test point whose label
+    matches no test label changes NO subset's utility: its value (and its
+    whole interaction row) must be zero -- exact and approx engines."""
+    xtr, ytr, xte, yte = _axiom_data(null_player=True)
+    opts = dict(engine="approx", **_APPROX) if approx else {}
+    res = get_method(method)(xtr, ytr, xte, yte, k=_AX["k"], **opts)
+    np.testing.assert_allclose(float(res.values()[-1]), 0.0, atol=1e-7)
+    if res.phi is not None:
+        np.testing.assert_allclose(np.asarray(res.phi)[-1], 0.0, atol=1e-7)
+
+
+@pytest.mark.parametrize("method", ["knn_shapley", "wknn", "loo", "sti"])
+@pytest.mark.parametrize("approx", [False, True])
+def test_symmetry_axiom_duplicate_points(method, approx):
+    """Interchangeable players (exact duplicates, same label) must receive
+    identical values -- exact and approx engines."""
+    xtr, ytr, xte, yte = _axiom_data(duplicate=True)
+    opts = dict(engine="approx", **_APPROX) if approx else {}
+    res = get_method(method)(xtr, ytr, xte, yte, k=_AX["k"], **opts)
+    vals = np.asarray(res.values())
+    np.testing.assert_allclose(vals[0], vals[-1], atol=1e-6)
 
 
 def test_moe_capacity_drops_are_bounded():

@@ -282,7 +282,8 @@ def test_sharded_point_engine_single_device_fallback():
 
 # --------------------------------------------------------------- ENGINES
 def test_engines_table_covers_builtin_methods():
-    assert ENGINES["sti"] == ("fused", "scan", "distributed", "sharded")
+    assert ENGINES["sti"] == ("fused", "scan", "distributed", "sharded",
+                              "approx")
     assert ENGINES["wknn"][0] == "streamed"       # default is the fast path
     assert "oracle" in ENGINES["wknn"] and "oracle" in ENGINES["knn_shapley"]
     assert "oracle" not in ENGINES["loo"]
