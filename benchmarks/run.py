@@ -112,7 +112,8 @@ def bench_baselines():
         ("sti_knn_fused_n2048_t256",
          _time(fused_sti_knn_interactions, x, y, xt, yt, 5, test_batch=64,
                fill="chunked", fill_params={"chunk": 1}, distance="xla"),
-         "fill=chunked1;distance=xla", {"method": "sti", "engine": "fused"}),
+         "fill=chunked1;distance=xla",
+         {"method": "sti", "engine": "fused", "fill": "chunked"}),
     ]
     # The PR-1 perf claim: the chunked scan fill vs the seed (t, n, n)-
     # materializing XLA fill at the acceptance size (t=64, n=2048). The
@@ -449,11 +450,11 @@ print(f"RECT,{{nr}},{{tr}},{{us_rect_scan:.1f}},{{us_rect_pal:.1f}},{{err_rect:.
          {"method": "sti", "engine": "sharded"}),
         (f"sti_sharded_{dev}dev_xla_scan_fill_n{nr}_t{tr}",
          float(us_rect_scan), "fill=rect_chunked(XLA block scan)",
-         {"method": "sti", "engine": "sharded"}),
+         {"method": "sti", "engine": "sharded", "fill": "chunked"}),
         (f"sti_sharded_{dev}dev_pallas_fill_n{nr}_t{tr}",
          float(us_rect_pal),
          f"fill=rect_pallas({pal_mode});max_err_vs_scan={err_rect}",
-         {"method": "sti", "engine": "sharded"}),
+         {"method": "sti", "engine": "sharded", "fill": "pallas"}),
     ]
 
 
@@ -603,6 +604,101 @@ def bench_approx():
     return rows
 
 
+# --------------------------------------------------------- megakernel:
+# the fused single-pallas_call step (ISSUE 10) vs the three-stage step with
+# the chunked and onehot fills at the paper sizes. `derived` carries the
+# achieved-vs-matmul-FLOPs ratio: time of a pure (tb, d) x (d, n) distance
+# matmul of the same FLOPs over the step time (the ROADMAP target is a
+# megakernel step within 2x of the matmul ON TPU; interpret-mode CPU rows
+# track correctness-path overhead only).
+def bench_megakernel():
+    from repro.kernels.sti_pipeline import fused_sti_knn_interactions
+
+    k, t, d, tb = 5, 64, 16, 16
+    rows = []
+    for n in (1024, 2048):
+        x, y, xt, yt = _problem(n, t, d)
+        xb = xt[:tb]
+        matmul = jax.jit(lambda a, b: a @ b.T)
+        us_mm_step = _time(matmul, xb, x)   # one step's distance FLOPs
+        us_mm = us_mm_step * (t // tb)      # whole-fold matmul equivalent
+        variants = (
+            ("megakernel", "megakernel", None, 2),
+            ("chunked", "chunked", {"chunk": 1}, 2),
+            ("onehot", "onehot", {"chunk": 1}, 1),  # O(t n^3): 1 rep
+        )
+        for label, fill, params, reps in variants:
+            us = _time(
+                fused_sti_knn_interactions, x, y, xt, yt, k,
+                test_batch=tb, fill=fill, fill_params=params,
+                distance="xla", reps=reps,
+            )
+            note = ("interpret" if label == "megakernel"
+                    and jax.default_backend() != "tpu" else "compiled")
+            rows.append((
+                f"megakernel_vs_{label}_n{n}_t{t}", us,
+                f"fill={label}({note});matmul_us={us_mm:.0f};"
+                f"matmul_flops_ratio={us_mm / us:.4f}",
+                {"method": "sti", "engine": "fused", "fill": label},
+            ))
+    return rows
+
+
+# ----------------------------------------------------- autotune campaign:
+# `--autotune` mode: populate the platform-keyed cache at the paper sizes
+# (single-device fill + distance + megastep, and the dev{D}/rows{R} rect
+# key for the sharded row blocks) BEFORE the timing benches run, and emit
+# one row per tuned entry so BENCH_sti_knn.json records which fill won
+# under which platform key.
+def bench_autotune_campaign():
+    from repro.kernels import autotune as at
+
+    backend = jax.default_backend()
+    plat = at.device_platform(backend)
+    devs = jax.device_count()
+    d, k = 16, 5
+    rows = []
+    for n, t in ((1024, 64), (2048, 64), (2048, 256)):
+        name, params = at.autotune_fill(n, t, backend=backend)
+        entry = at._load(None).get(at._key("fill", backend, n, t)) or {}
+        rows.append((
+            f"autotune_fill_n{n}_t{t}", float(entry.get("us", 0.0)),
+            f"winner={name};params={json.dumps(params, sort_keys=True)};"
+            f"platform={plat}",
+            {"method": "sti", "engine": "fused", "fill": name},
+        ))
+        rows_r = max(1, n // devs)
+        rname, rparams = at.autotune_rect_fill(rows_r, n, t, backend=backend)
+        rentry = at._load(None).get(
+            at._key("rectfill", backend, n, t, rows=rows_r)) or {}
+        rows.append((
+            f"autotune_rectfill_rows{rows_r}_n{n}_t{t}",
+            float(rentry.get("us", 0.0)),
+            f"winner={rname};params={json.dumps(rparams, sort_keys=True)};"
+            f"platform={plat};devices={devs}",
+            {"method": "sti", "engine": "sharded", "fill": rname},
+        ))
+        dname, dparams = at.autotune_distance(t, n, d, backend=backend)
+        rows.append((
+            f"autotune_distance_n{n}_t{t}_d{d}", 0.0,
+            f"winner={dname};params={json.dumps(dparams, sort_keys=True)};"
+            f"platform={plat}",
+            {"method": "sti", "engine": "fused", "fill": None},
+        ))
+        sname, sparams = at.autotune_megastep(n, d, k, t, backend=backend)
+        sentry = at._load(None).get(
+            at._key(f"megastep_d{d}", backend, n, t)) or {}
+        rows.append((
+            f"autotune_megastep_n{n}_t{t}_d{d}",
+            float(sentry.get("us", 0.0)),
+            f"winner={sname};params={json.dumps(sparams, sort_keys=True)};"
+            f"platform={plat}",
+            {"method": "sti", "engine": "fused",
+             "fill": "megakernel" if sname == "megakernel" else sname},
+        ))
+    return rows
+
+
 # ------------------------------------------------------------ lint gate:
 # the reprolint CI job's own cost (DESIGN.md Sec. 14) -- the full-tree AST
 # lint plus the abstract-eval contract checks must stay well under a
@@ -642,6 +738,8 @@ BENCHES = {
     "sharded": bench_sharded,
     "service": bench_service,
     "approx": bench_approx,
+    "megakernel": bench_megakernel,
+    "autotune": bench_autotune_campaign,
     "lint": bench_lint,
 }
 
@@ -654,11 +752,21 @@ def main() -> None:
                          "tracked across PRs)")
     ap.add_argument("--json-path", default=None,
                     help="output path for the JSON report (implies --json)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="campaign mode: tune the paper sizes into the "
+                         "platform-keyed autotune cache BEFORE timing, and "
+                         "emit one row per tuned winner")
     args = ap.parse_args()
     if args.json_path:
         args.json = True
     args.json_path = args.json_path or "BENCH_sti_knn.json"
-    names = [args.only] if args.only else list(BENCHES)
+    # the campaign only runs when asked for: a default run must not spend
+    # minutes tuning nor write to the user's cache
+    names = [args.only] if args.only else [
+        nm for nm in BENCHES if nm != "autotune"
+    ]
+    if args.autotune and "autotune" not in names:
+        names = ["autotune"] + names
     print("name,us_per_call,derived")
     all_rows = []
     # per-bench default provenance; rows may override (or extend) it with an
@@ -676,6 +784,8 @@ def main() -> None:
         "sharded": {"method": "sti", "engine": "sharded"},
         "service": {"method": "knn_shapley", "engine": "service"},
         "approx": {"method": None, "engine": "approx"},
+        "megakernel": {"method": "sti", "engine": "fused"},
+        "autotune": {"method": None, "engine": None},
         "lint": {"method": None, "engine": None},
     }
     for nm in names:
@@ -688,8 +798,11 @@ def main() -> None:
                 {"bench": nm, "name": row[0],
                  "us_per_call": round(float(row[1]), 1), "derived": row[2],
                  "method": prov.get("method"), "engine": prov.get("engine"),
-                 # rows carry their own backend: merge-on-write mixes runs
-                 # from different hosts, so file-level fields are not enough
+                 # rows carry the resolved fill (None when the bench has no
+                 # fill stage) and their own backend: merge-on-write mixes
+                 # runs from different hosts, so file-level fields are not
+                 # enough
+                 "fill": prov.get("fill"),
                  "backend": jax.default_backend()})
     if args.json:
         # merge-on-write: a partial run (--only sharded) APPENDS its rows to

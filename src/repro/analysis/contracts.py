@@ -21,6 +21,11 @@ WITHOUT running any valuation compute, using JAX's abstract machinery:
   * the ENGINES table and the stream-kernel registry are cross-checked
     (C501): a method advertising a streaming engine must have a kernel,
     and every kernel must be reachable from the table.
+  * every method prepared with `fill="megakernel"` must trace to a step
+    jaxpr containing EXACTLY ONE `pallas_call` eqn (C601) — the static
+    proof of the megakernel's whole claim: distance, streaming sort, and
+    accumulator update fused into a single kernel launch, single-device
+    and sharded alike.
 
 Checks are sized by tiny (n, d, k, tb) defaults — the whole suite traces
 in seconds. Findings reuse `repro.analysis.findings.Finding` with a
@@ -47,6 +52,7 @@ __all__ = [
     "check_step_jaxprs",
     "check_retrace_sentinel",
     "check_engine_table",
+    "check_megakernel_contract",
 ]
 
 # jaxpr-level names of the cross-device collectives (what lax.psum /
@@ -368,6 +374,73 @@ def check_engine_table() -> list[Finding]:
     return out
 
 
+def check_megakernel_contract(n: int = 64, d: int = 8, k: int = 4,
+                              tb: int = 8) -> list[Finding]:
+    """C601: `fill="megakernel"` must resolve to a step whose jaxpr holds
+    exactly one `pallas_call` — no secondary kernels, no fill/distance
+    stages left outside. Checked for every registered stream method,
+    single-device and sharded (1-device mesh; the shard_map body traces the
+    same kernel structure regardless of topology)."""
+    from repro.kernels.sti_pipeline import (
+        prepare_sharded_stream_step,
+        prepare_stream_step,
+    )
+    from repro.kernels.stream_kernels import stream_methods
+
+    out: list[Finding] = []
+    for method in stream_methods():
+        variants = []
+        try:
+            step, resolved, spec = prepare_stream_step(
+                method, n, d, k, test_batch=tb, fill="megakernel",
+            )
+            variants.append((f"megakernel/{method}", step, spec, tb,
+                             resolved))
+            step, resolved, _, spec = prepare_sharded_stream_step(
+                method, n, d, k, shards=1, test_batch=tb, fill="megakernel",
+            )
+            variants.append((f"sharded_megakernel/{method}", step, spec,
+                             resolved["test_batch"], resolved))
+        except Exception as exc:  # noqa: BLE001
+            out.append(_finding(
+                "C601", f"megakernel/{method}",
+                f"megakernel step failed to prepare: {_err(exc)}",
+            ))
+            continue
+        for label, step, spec, tb_r, resolved in variants:
+            if resolved.get("fill") != "megakernel":
+                out.append(_finding(
+                    "C601", label,
+                    f"fill='megakernel' resolved to "
+                    f"{resolved.get('fill')!r}",
+                ))
+                continue
+            state = tuple(_sds(s, jnp.float32) for s in spec.shapes(n))
+            try:
+                closed = jax.make_jaxpr(step)(
+                    state, *_batch_avals(tb_r, n, d)
+                )
+            except Exception as exc:  # noqa: BLE001
+                out.append(_finding(
+                    "C601", label,
+                    f"megakernel step failed to trace: {_err(exc)}",
+                ))
+                continue
+            calls = sum(
+                1 for eqn, _ in _walk_eqns(closed.jaxpr)
+                if eqn.primitive.name == "pallas_call"
+            )
+            if calls != 1:
+                out.append(_finding(
+                    "C601", label,
+                    f"step jaxpr contains {calls} `pallas_call` eqns, the "
+                    f"megakernel contract requires exactly 1",
+                    "the fused step must run distance, streaming sort, and "
+                    "accumulator update inside one kernel launch",
+                ))
+    return out
+
+
 def check_contracts(n: int = 64, d: int = 8, k: int = 4,
                     tb: int = 8) -> list[Finding]:
     """Run every Layer 2 contract check; [] means all contracts hold.
@@ -381,4 +454,5 @@ def check_contracts(n: int = 64, d: int = 8, k: int = 4,
     out.extend(check_step_jaxprs(n, d, k, tb))
     out.extend(check_retrace_sentinel(n, d, k, tb))
     out.extend(check_engine_table())
+    out.extend(check_megakernel_contract(n, d, k, tb))
     return sorted(out, key=lambda f: (f.code, f.path))

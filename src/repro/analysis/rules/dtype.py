@@ -1,14 +1,23 @@
 """R5xx — dtype discipline: low-precision matmuls must accumulate in f32.
 
 R501: `jnp.einsum` / `jnp.dot` / `jnp.matmul` / `lax.dot_general` /
-      `lax.dot` where an operand is visibly cast to bf16/f16 (a literal
-      `jnp.bfloat16`/`jnp.float16` astype, or the repo's compute-dtype
-      names `cdtype`/`compute_dtype`/`cfg.dtype`) and the call does not
-      pass `preferred_element_type`. On the MXU such a contraction
-      accumulates in bf16 partials — the t*n^2 accumulation loses ~8 bits
-      of mantissa exactly where the paper's exactness claim lives. The
-      ROADMAP's bf16-compute campaign makes every such site a trap; the
-      fix is one keyword (`preferred_element_type=jnp.float32`).
+      `lax.dot` / `pl.dot` where an operand is visibly cast to bf16/f16 (a
+      literal `jnp.bfloat16`/`jnp.float16` astype, or the repo's
+      compute-dtype names `cdtype`/`compute_dtype`/`cfg.dtype`) and the
+      call does not pass `preferred_element_type`. On the MXU such a
+      contraction accumulates in bf16 partials — the t*n^2 accumulation
+      loses ~8 bits of mantissa exactly where the paper's exactness claim
+      lives. The ROADMAP's bf16-compute campaign makes every such site a
+      trap; the fix is one keyword (`preferred_element_type=jnp.float32`).
+
+      Inside PALLAS KERNEL BODIES (a function passed to `pl.pallas_call`,
+      possibly through `functools.partial`, or one following the `*_ref`
+      parameter convention) the check additionally tracks local names BOUND
+      to a low-precision cast (`xq = xb.astype(cdtype)`): a matmul that
+      contracts such a name without `preferred_element_type` trips even
+      though no `.astype` appears in its own argument list — the megakernel
+      pattern hoists the cast out of the dot, which the literal-operand
+      scan cannot see.
 """
 
 from __future__ import annotations
@@ -58,10 +67,72 @@ def _has_lowp_operand(call: ast.Call) -> bool:
     return False
 
 
-@rule("R501", "lowp-matmul-accumulation")
-def check_lowp_matmul(ctx: ModuleContext) -> Iterator[Finding]:
-    """bf16/f16 contraction without preferred_element_type=f32."""
-    for node in ast.walk(ctx.tree):
+def _is_lowp_cast(node: ast.expr) -> bool:
+    """Whether an expression ends in `.astype(<lowp dtype>)`."""
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "astype"
+        and bool(node.args)
+        and _lowp_dtype_expr(node.args[0])
+    )
+
+
+def _pallas_kernel_fns(tree: ast.AST) -> list[ast.FunctionDef]:
+    """FunctionDefs that are Pallas kernel bodies: named (directly, via
+    `functools.partial(fn, ...)`, or via a local name bound to such a
+    partial) as the first argument of a `pallas_call`, or following the
+    repo's kernel convention of >= 2 parameters ending in `_ref`."""
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and last_part(dotted_name(node.value.func)) == "partial"
+                and node.value.args):
+            partial_of[node.targets[0].id] = last_part(
+                dotted_name(node.value.args[0])
+            )
+    kernel_names = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and last_part(dotted_name(node.func)) == "pallas_call"
+                and node.args):
+            continue
+        target = node.args[0]
+        if (isinstance(target, ast.Call)
+                and last_part(dotted_name(target.func)) == "partial"
+                and target.args):
+            target = target.args[0]
+        name = last_part(dotted_name(target))
+        kernel_names.add(partial_of.get(name, name))
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        params = [a.arg for a in node.args.args]
+        n_refs = sum(1 for p in params if p.endswith("_ref"))
+        if node.name in kernel_names or n_refs >= 2:
+            out.append(node)
+    return out
+
+
+def _lowp_bound_names(fn: ast.FunctionDef) -> set[str]:
+    """Local names bound (anywhere in the kernel body, including nested
+    closures) to a bf16/f16 `.astype` result."""
+    names: set[str] = set()
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and _is_lowp_cast(node.value)):
+            names.add(node.targets[0].id)
+    return names
+
+
+def _matmuls_without_pet(tree: ast.AST) -> Iterator[tuple[ast.Call, str]]:
+    """(call, op) for every matmul-family call missing
+    preferred_element_type."""
+    for node in ast.walk(tree):
         if not isinstance(node, ast.Call):
             continue
         op = last_part(dotted_name(node.func))
@@ -69,7 +140,16 @@ def check_lowp_matmul(ctx: ModuleContext) -> Iterator[Finding]:
             continue
         if any(kw.arg == "preferred_element_type" for kw in node.keywords):
             continue
+        yield node, op
+
+
+@rule("R501", "lowp-matmul-accumulation")
+def check_lowp_matmul(ctx: ModuleContext) -> Iterator[Finding]:
+    """bf16/f16 contraction without preferred_element_type=f32."""
+    seen: set[int] = set()
+    for node, op in _matmuls_without_pet(ctx.tree):
         if _has_lowp_operand(node):
+            seen.add(id(node))
             yield ctx.finding(
                 "R501", node,
                 f"'{op}' contracts a bf16/f16-cast operand without "
@@ -78,3 +158,25 @@ def check_lowp_matmul(ctx: ModuleContext) -> Iterator[Finding]:
                 "add preferred_element_type=jnp.float32 (cast the result "
                 "back down if the storage dtype matters)",
             )
+    # kernel-body pass: casts hoisted into local names
+    for fn in _pallas_kernel_fns(ctx.tree):
+        lowp = _lowp_bound_names(fn)
+        if not lowp:
+            continue
+        for node, op in _matmuls_without_pet(fn):
+            if id(node) in seen:
+                continue
+            if any(
+                isinstance(sub, ast.Name) and sub.id in lowp
+                for arg in node.args for sub in ast.walk(arg)
+            ):
+                seen.add(id(node))
+                yield ctx.finding(
+                    "R501", node,
+                    f"'{op}' in Pallas kernel '{fn.name}' contracts an "
+                    f"operand bound to a bf16/f16 cast without "
+                    f"preferred_element_type: the MXU accumulates partials "
+                    f"in low precision",
+                    "add preferred_element_type=jnp.float32 to the "
+                    "contraction",
+                )

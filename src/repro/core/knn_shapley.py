@@ -17,6 +17,7 @@ distance -> rank -> update step the interaction engines run.
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 __all__ = ["knn_shapley_values", "knn_shapley_from_sorted"]
@@ -29,15 +30,19 @@ def knn_shapley_from_sorted(match_sorted: jnp.ndarray, k: int) -> jnp.ndarray:
     Linear in `match_sorted` (the recurrence proof only uses linearity of
     the utility in the per-point values), which is what lets the streaming
     engine fold a validity mask in and reuse this closed form for the
-    weighted contribution vector of `repro.core.wknn`.
+    weighted contribution vector of `repro.core.wknn`. The 1-based position
+    vector is a `broadcasted_iota` (not `jnp.arange`) so the recurrence can
+    run INSIDE a Pallas kernel body (the megakernel's update phase):
+    arange constant-folds to a concrete array that `pallas_call` rejects as
+    a captured constant, while iota traces into the kernel jaxpr.
     """
     m = match_sorted.astype(jnp.float32)
     n = m.shape[-1]
-    i1 = jnp.arange(1, n + 1, dtype=jnp.float32)  # 1-based position
+    i1 = jax.lax.broadcasted_iota(jnp.float32, m.shape, m.ndim - 1) + 1.0
     last = m[..., -1:] * min(k, n) / (k * n)
     # step[i] = (m(i) - m(i+1))/k * min(k,i)/i   for i = 1..n-1 (1-based)
     diff = m[..., :-1] - m[..., 1:]
-    coef = jnp.minimum(float(k), i1[:-1]) / i1[:-1]
+    coef = jnp.minimum(float(k), i1[..., :-1]) / i1[..., :-1]
     step = diff * coef / k
     # s_i = last + sum_{j >= i} step[j]
     suffix = jnp.flip(jnp.cumsum(jnp.flip(step, -1), -1), -1)

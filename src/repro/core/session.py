@@ -300,12 +300,18 @@ class ValuationSession:
         # (The sharded engine reports its fill under a rect_-prefixed name
         # from the rectangular registry -- leave those to re-resolve, or
         # pass fill= explicitly to pin a rect variant; point-value modes
-        # have no fill at all.)
+        # have no fill at all. "megakernel" is a whole-step fill outside
+        # the square registry -- the prepare_* paths branch on it before
+        # resolve_fill, so it round-trips as-is.)
         from repro.core.sti_knn import _FILL_FNS
 
         for opt in ("fill", "distance"):
             value = cfg.get("resolved", {}).get(opt)
-            if value is None or (opt == "fill" and value not in _FILL_FNS):
+            if value is None or (
+                opt == "fill"
+                and value != "megakernel"
+                and value not in _FILL_FNS
+            ):
                 continue
             session_opts.setdefault(opt, value)
         if cfg.get("method_opts"):

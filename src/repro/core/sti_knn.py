@@ -596,6 +596,13 @@ def resolve_fill(
     if fill not in _FILL_FNS:
         raise ValueError(
             f"unknown fill {fill!r}; registered: {sorted(_FILL_FNS)}"
+            + (
+                " (fill='megakernel' is a whole-step fill available only"
+                " through the fused/sharded engines, not the square"
+                " registry)"
+                if fill == "megakernel"
+                else ""
+            )
         )
     bad = set(params) - set(_accepted_params(_FILL_FNS[fill], params))
     if bad:

@@ -8,6 +8,12 @@ from repro.kernels.sti_fill import (
 )
 from repro.kernels.distance import distance_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sti_megakernel import (
+    merge_sorted_tile,
+    point_megakernel,
+    sti_megakernel,
+    streaming_merge_reference,
+)
 from repro.kernels.sti_pipeline import (
     fused_sti_knn_interactions,
     make_fused_step,
@@ -32,6 +38,10 @@ __all__ = [
     "rect_row_view",
     "distance_pallas",
     "flash_attention_pallas",
+    "merge_sorted_tile",
+    "streaming_merge_reference",
+    "sti_megakernel",
+    "point_megakernel",
     "fused_sti_knn_interactions",
     "make_fused_step",
     "make_point_step",

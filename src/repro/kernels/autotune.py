@@ -34,6 +34,7 @@ import jax.numpy as jnp
 __all__ = [
     "cache_path",
     "clear_cache",
+    "device_platform",
     "fill_candidates",
     "autotune_fill",
     "lookup_fill",
@@ -48,12 +49,25 @@ __all__ = [
     "ann_candidates",
     "autotune_ann",
     "best_ann",
+    "megakernel_candidates",
+    "autotune_megastep",
+    "lookup_megastep",
+    "best_megastep",
 ]
 
 _LOCK = threading.Lock()
 # Fill timing is linear in t: measure on at most this many test rows and
 # transfer the winner to the full t.
 _SAMPLE_T = 16
+
+# Cache schema version. v2 added the device-kind segment to every key
+# (see `_key`): v1 entries are NOT platform-keyed, so an interpret-mode
+# CPU tuning could be served to a TPU run of the same backend string --
+# `_load` migrates by discarding any file with a different stamp (the
+# cache is self-healing: dropped winners just re-tune or fall back to the
+# heuristic).
+_SCHEMA = 2
+_SCHEMA_KEY = "__schema__"
 
 
 def cache_path(path: Optional[str] = None) -> str:
@@ -88,6 +102,13 @@ def _load(path: Optional[str]) -> dict:
             data = json.load(f)
     except (OSError, ValueError):
         data = {}
+    if data:
+        if data.get(_SCHEMA_KEY) != _SCHEMA:
+            # pre-platform-segment (or future) schema: invalidate wholesale
+            data = {}
+        else:
+            # the stamp is a file-format detail: callers see entries only
+            data = {k: v for k, v in data.items() if k != _SCHEMA_KEY}
     _MEMO[p] = (mtime, data)
     return data
 
@@ -96,11 +117,16 @@ def _save(path: Optional[str], data: dict) -> None:
     p = cache_path(path)
     os.makedirs(os.path.dirname(p) or ".", exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(p) or ".", suffix=".tmp")
+    data = dict(data)
+    data[_SCHEMA_KEY] = _SCHEMA
     try:
         with os.fdopen(fd, "w") as f:
             json.dump(data, f, indent=1, sort_keys=True)
         os.replace(tmp, p)
-        _MEMO[p] = (os.stat(p).st_mtime_ns, data)
+        _MEMO[p] = (
+            os.stat(p).st_mtime_ns,
+            {k: v for k, v in data.items() if k != _SCHEMA_KEY},
+        )
     except BaseException:
         try:
             os.unlink(tmp)
@@ -124,18 +150,39 @@ def _bucket(x: int) -> int:
     return 1 << max(0, int(np.ceil(np.log2(max(1, x)))))
 
 
+@functools.lru_cache(maxsize=None)
+def device_platform(backend: Optional[str] = None) -> str:
+    """Short device-KIND slug for cache keys: "cpu", "tpuv4", "tpuv5e",
+    "nvidiaa100"... -- lowercased alphanumerics of
+    `jax.devices()[0].device_kind`. The backend string alone ("cpu"/"tpu")
+    cannot distinguish TPU generations, and -- the case that matters in
+    this repo's CI -- an interpret-mode Pallas timing taken on CPU must
+    never be served to a real TPU run. Falls back to the backend name when
+    no device of that backend is attached."""
+    try:
+        devices = jax.devices(backend) if backend else jax.devices()
+        kind = str(devices[0].device_kind)
+    except Exception:
+        kind = str(backend or "unknown")
+    slug = "".join(ch for ch in kind.lower() if ch.isalnum())
+    return slug or "unknown"
+
+
 def _key(kind: str, backend: str, n: int, t: int,
          devices: Optional[int] = None, rows: Optional[int] = None) -> str:
-    """Cache key. Entries are keyed by the visible DEVICE COUNT as well as
-    backend and bucketed sizes: the sharded engine executes its stages on
-    (t/D, n) and (n/D, n) slices, so a winner tuned single-device must not
-    leak into multi-device runs (and vice versa). Rectangular fills add a
-    `rows{R}` segment (the bucketed per-device row-block height): a winner
-    for an (n/8, n) block must not leak into (n/256, n) runs that share the
-    same n/t buckets."""
+    """Cache key. Entries are keyed by the device PLATFORM slug (device
+    kind, e.g. `cpu` / `tpuv4` -- see `device_platform`) and the visible
+    DEVICE COUNT as well as backend and bucketed sizes: the sharded engine
+    executes its stages on (t/D, n) and (n/D, n) slices, so a winner tuned
+    single-device must not leak into multi-device runs (and vice versa),
+    and a winner timed in interpret mode on CPU must never be served to a
+    TPU run. Rectangular fills add a `rows{R}` segment (the bucketed
+    per-device row-block height): a winner for an (n/8, n) block must not
+    leak into (n/256, n) runs that share the same n/t buckets."""
     d = jax.device_count() if devices is None else int(devices)
     r = "" if rows is None else f"rows{_bucket(rows)}:"
-    return f"{kind}:{backend}:dev{d}:{r}n{_bucket(n)}:t{_bucket(t)}"
+    plat = device_platform(backend)
+    return f"{kind}:{backend}:{plat}:dev{d}:{r}n{_bucket(n)}:t{_bucket(t)}"
 
 
 def _time_call(fn, *args, reps: int = 2) -> float:
@@ -597,3 +644,151 @@ def best_ann(
     if allow_tune:
         return autotune_ann(n, t, d, m, backend=backend, path=path)
     return default_ann(n, m)
+
+
+# ------------------------------------------------------------ megakernel ----
+# The fused valuation megakernel (kernels/sti_megakernel.py) is an
+# alternative to the whole three-stage step, not to one stage, so its tuner
+# times COMPLETE steps: the best three-stage configuration (distance ->
+# sort/rank -> fill, via best_fill) against megakernel tile-shape
+# candidates, and records which STEP wins. `fill="auto"` in the fused
+# pipeline consults `best_megastep`; the untuned default is "stages"
+# everywhere (interpret-mode Pallas on CPU is Python-speed, and on TPU the
+# winner should be measured, not assumed).
+
+
+def megakernel_candidates(n: int, t: int, backend: str) -> list[dict]:
+    """Candidate megakernel tile-shape dicts per backend. On TPU: lane-
+    aligned test-row tiles crossed with train-tile widths and accumulator
+    block shapes, in f32 and bf16 compute. Off-TPU (interpret mode) a
+    single coarse full-extent candidate represents the kernel -- block
+    shapes are irrelevant at Python speed, and the entry exists so a CPU
+    tune records an honest "stages beats megakernel here" verdict."""
+    if backend != "tpu":
+        return [{"compute_dtype": "float32"}]
+    cands: list[dict] = []
+    for bt in (8, 16):
+        for bn in (256, 512):
+            if bn > max(256, n):
+                continue
+            for cdtype in ("float32", "bfloat16"):
+                cands.append({
+                    "block_t": bt,
+                    "block_n": bn,
+                    "block_rows": 256,
+                    "block_cols": 256,
+                    "compute_dtype": cdtype,
+                })
+    return cands
+
+
+def _synthetic_step_problem(n: int, d: int, ts: int):
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, 2, size=(n,)).astype(np.int32))
+    xb = jnp.asarray(rng.normal(size=(ts, d)).astype(np.float32))
+    yb = jnp.asarray(rng.integers(0, 2, size=(ts,)).astype(np.int32))
+    mask = jnp.ones((ts,), jnp.float32)
+    acc = jnp.zeros((n, n), jnp.float32)
+    diag = jnp.zeros((n,), jnp.float32)
+    return acc, diag, xb, yb, mask, xs, ys
+
+
+def autotune_megastep(
+    n: int,
+    d: int,
+    k: int,
+    t: int,
+    *,
+    backend: Optional[str] = None,
+    reps: int = 2,
+    path: Optional[str] = None,
+    verbose: bool = False,
+) -> tuple[str, dict]:
+    """Time the best three-stage step against every megakernel tile
+    candidate on a synthetic (t-sample, n, d) problem; persist which step
+    wins ("stages" or "megakernel") plus its params."""
+    from repro.kernels.sti_pipeline import make_fused_step
+
+    backend = backend or jax.default_backend()
+    ts = int(min(max(1, t), _SAMPLE_T))
+    acc, diag, xb, yb, mask, xs, ys = _synthetic_step_problem(n, d, ts)
+    args = (acc, diag, xb, yb, mask, xs, ys)
+
+    stages_name, stages_params = best_fill(n, t, backend=backend, path=path)
+    timings: dict[str, float] = {}
+    # donate=False: the timing loop replays the same operands, so the step
+    # must not consume its accumulator buffers.
+    base = make_fused_step(
+        int(k), "sti", stages_name, tuple(sorted(stages_params.items())),
+        donate=False,
+    )
+    try:
+        timings["stages {}"] = _time_call(base, *args, reps=reps)
+    except Exception:
+        pass
+    for params in megakernel_candidates(n, ts, backend):
+        step = make_fused_step(
+            int(k), "sti", "megakernel", tuple(sorted(params.items())),
+            donate=False,
+        )
+        try:
+            us = _time_call(step, *args, reps=reps)
+        except Exception:  # candidate unsupported on this backend
+            continue
+        timings[f"megakernel {json.dumps(params, sort_keys=True)}"] = us
+        if verbose:
+            print(f"autotune megastep n={n} t={t} {params}: {us:.0f}us")
+    if not timings:
+        return "stages", {}
+    winner = min(timings, key=timings.get)
+    name, params_json = winner.split(" ", 1)
+    params = json.loads(params_json) if params_json.strip() != "{}" else {}
+    entry = {
+        "step": name,
+        "params": params,
+        "us": timings[winner],
+        "sample_t": ts,
+        "candidates": timings,
+    }
+    with _LOCK:
+        data = dict(_load(path))
+        data[_key(f"megastep_d{d}", backend, n, t)] = entry
+        _save(path, data)
+    return name, params
+
+
+def lookup_megastep(
+    n: int, t: int, d: int, *, backend: Optional[str] = None,
+    path: Optional[str] = None,
+) -> Optional[tuple[str, dict]]:
+    """Cached step winner ("stages"/"megakernel", params) for this
+    (n, t, d, backend), or None."""
+    backend = backend or jax.default_backend()
+    entry = _load(path).get(_key(f"megastep_d{d}", backend, n, t))
+    if not isinstance(entry, dict) or "step" not in entry:
+        return None
+    return str(entry["step"]), dict(entry.get("params") or {})
+
+
+def best_megastep(
+    n: int,
+    t: int,
+    d: int,
+    k: int,
+    *,
+    backend: Optional[str] = None,
+    allow_tune: bool = False,
+    path: Optional[str] = None,
+) -> tuple[str, dict]:
+    """Cache hit > (optional) fresh tune > "stages". The untuned default
+    keeps today's three-stage step on every backend: the megakernel only
+    takes over a `fill="auto"` run after a measurement on this platform
+    says it should."""
+    backend = backend or jax.default_backend()
+    hit = lookup_megastep(n, t, d, backend=backend, path=path)
+    if hit is not None:
+        return hit
+    if allow_tune:
+        return autotune_megastep(n, d, k, t, backend=backend, path=path)
+    return "stages", {}

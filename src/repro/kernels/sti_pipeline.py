@@ -215,13 +215,31 @@ def make_fused_step(
     comparison. All four pipeline stages trace into the one XLA program.
     Cached per static configuration, so repeated streaming runs reuse the
     executable.
+
+    `fill="megakernel"` swaps the whole three-stage body for the fully
+    fused single-`pallas_call` step (`repro.kernels.sti_megakernel`):
+    identical contract, one kernel per batch, `fill_static` carrying the
+    tile shapes / compute dtype instead of fill chunking (the `distance`
+    pair is ignored -- the distance stage lives inside the kernel).
     """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import sti_megakernel
+
+        params = dict(fill_static)
+
+        def mega_step(acc, diag, xb, yb, mask, x_train, y_train):
+            return sti_megakernel(
+                acc, diag, xb, yb, mask, x_train, y_train,
+                k=int(k), mode=mode, **params,
+            )
+
+        return jax.jit(mega_step, donate_argnums=(0, 1) if donate else ())
     body = _stream_body(
         make_update_kernel(mode, k, fill=fill, fill_static=fill_static),
         int(k), _distance_fn(distance, distance_static),
     )
-    if donate is None:
-        donate = jax.default_backend() != "cpu"
 
     def step(acc, diag, xb, yb, mask, x_train, y_train):
         return body((acc, diag), xb, yb, mask, x_train, y_train)
@@ -237,6 +255,8 @@ def make_point_step(
     distance: str = "xla",
     distance_static: tuple = (),
     donate: Optional[bool] = None,
+    fill: Optional[str] = None,
+    fill_static: tuple = (),
 ) -> Callable:
     """Build the jitted vector-accumulator step for a point-value method
     ("knn_shapley", "wknn", "loo"):
@@ -248,13 +268,31 @@ def make_point_step(
     accumulators. `method_static` is the hashable method-option tuple (e.g.
     (("weights", "rbf"),) for wknn). Same generic body, same pad/mask
     contract, same executable-per-configuration caching as the fused step.
+
+    Point methods have no fill stage, but `fill="megakernel"` routes the
+    step through the fused single-`pallas_call` kernel
+    (`sti_megakernel.point_megakernel`) with `fill_static` carrying its
+    tile shapes / compute dtype (the `distance` pair is then ignored).
     """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import point_megakernel
+
+        params = dict(fill_static)
+        opts = dict(method_static)
+
+        def mega_step(vec, xb, yb, mask, x_train, y_train):
+            return point_megakernel(
+                vec, xb, yb, mask, x_train, y_train,
+                method=method, k=int(k), opts=opts, **params,
+            )
+
+        return jax.jit(mega_step, donate_argnums=(0,) if donate else ())
     body = _stream_body(
         make_update_kernel(method, k, opts=dict(method_static)),
         int(k), _distance_fn(distance, distance_static),
     )
-    if donate is None:
-        donate = jax.default_backend() != "cpu"
 
     def step(vec, xb, yb, mask, x_train, y_train):
         return body((vec,), xb, yb, mask, x_train, y_train)[0]
@@ -401,6 +439,36 @@ def _vector_state(inner: Callable) -> Callable:
     return step
 
 
+def _resolve_megakernel(
+    fill: str, n: int, d: int, k: int, tb: int,
+    fill_params: Optional[dict], autotune: bool,
+) -> Optional[tuple]:
+    """Resolve whether a step should run as the fused megakernel: returns
+    its static-param tuple, or None for the three-stage path.
+
+    `fill="megakernel"` forces it (fill_params carry tile shapes / compute
+    dtype). `fill="auto"` consults the step-level autotune triad
+    (`autotune.best_megastep`, platform-keyed): the megakernel is picked
+    only where a tuned run measured it faster than the three-stage step --
+    so interpret-mode CPU runs keep today's default unless a TPU tuning
+    says otherwise, which is exactly the "selectable via autotune"
+    contract."""
+    from repro.kernels.sti_megakernel import megakernel_static
+
+    if fill == "megakernel":
+        return megakernel_static(fill_params)
+    if fill != "auto":
+        return None
+    from repro.kernels.autotune import best_megastep
+
+    name, params = best_megastep(n, tb, d, int(k), allow_tune=autotune)
+    if name != "megakernel":
+        return None
+    merged = dict(params)
+    merged.update(fill_params or {})
+    return megakernel_static(merged)
+
+
 def prepare_fused_step(
     n: int,
     d: int,
@@ -423,8 +491,17 @@ def prepare_fused_step(
     result metadata). This is the per-batch unit `ValuationSession` drives for
     unbounded test streams; `fused_sti_knn_interactions` below is the one-shot
     wrapper over the same step.
+
+    `fill="megakernel"` (or an `auto` resolution whose autotune cache says
+    the megakernel wins) returns the fused single-`pallas_call` step;
+    resolved reports `{"fill": "megakernel", "distance": "fused"}` since
+    the distance stage is inside the kernel.
     """
     tb = max(1, int(test_batch))
+    mega = _resolve_megakernel(fill, n, d, k, tb, fill_params, autotune)
+    if mega is not None:
+        step = make_fused_step(int(k), mode, "megakernel", mega)
+        return step, {"fill": "megakernel", "distance": "fused"}
     fill_name, fill_static = resolve_fill(
         fill, n, tb, fill_params=fill_params, autotune=autotune
     )
@@ -462,8 +539,11 @@ def prepare_stream_step(
     methods, (vec,) for point-value methods). Interaction methods resolve
     through the fill registry exactly as `prepare_fused_step`; point methods
     have no fill stage (resolved["fill"] is None) but share the distance
-    resolution. `method_opts` carries method statics such as the wknn
-    weight kind. This is the per-batch unit `ValuationSession` drives.
+    resolution -- EXCEPT `fill="megakernel"`, which routes ANY method
+    through its fused single-`pallas_call` step (resolved["fill"] then
+    reports "megakernel" and the distance stage lives inside the kernel).
+    `method_opts` carries method statics such as the wknn weight kind.
+    This is the per-batch unit `ValuationSession` drives.
     """
     spec = accumulator_spec(method)
     tb = max(1, int(test_batch))
@@ -474,6 +554,15 @@ def prepare_stream_step(
             distance_params=distance_params, autotune=autotune,
         )
         return _tuple_state(inner), dict(resolved), spec
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import megakernel_static
+
+        inner = make_point_step(
+            method, int(k), _method_static(method_opts),
+            fill="megakernel", fill_static=megakernel_static(fill_params),
+        )
+        resolved = {"fill": "megakernel", "distance": "fused"}
+        return _vector_state(inner), resolved, spec
     dist_name, dist_static = resolve_distance(
         distance, tb, n, d, distance_params=distance_params,
         autotune=autotune,
@@ -493,6 +582,8 @@ def stream_point_values(
     k: int,
     *,
     test_batch: int = 512,
+    fill: Optional[str] = None,
+    fill_params: Optional[dict] = None,
     distance: str = "xla",
     distance_params: Optional[dict] = None,
     method_opts: Optional[dict] = None,
@@ -504,7 +595,9 @@ def stream_point_values(
     One-shot twin of `fused_sti_knn_interactions` for vector-state methods:
     streams ceil(t / test_batch) donated steps, pads the ragged trailing
     batch with a zero validity mask (exact -- every update kernel is linear
-    in the masked contribution), and divides by t at the end. The public
+    in the masked contribution), and divides by t at the end.
+    `fill="megakernel"` routes the step through the fused single-kernel
+    path (point methods otherwise have no fill stage). The public
     `knn_shapley_values` / `wknn_shapley_values` / `loo_values` functions
     are thin wrappers over this driver.
     """
@@ -525,7 +618,8 @@ def stream_point_values(
         raise ValueError("need at least one test point")
     tb = max(1, min(int(test_batch), t))
     step, _, spec = prepare_stream_step(
-        method, n, d, k, test_batch=tb, distance=distance,
+        method, n, d, k, test_batch=tb, fill=fill or "auto",
+        fill_params=fill_params, distance=distance,
         distance_params=distance_params, autotune=autotune,
         method_opts=method_opts,
     )
@@ -851,18 +945,45 @@ def make_sharded_step(
     are donated off-CPU, exactly like the fused step. Like `make_fused_step`
     this is a thin instantiation of the generic `_stream_body`, with the
     interaction kernel's shard_map-local update variant (`axis=` bound).
+
+    `fill="megakernel"` keeps the step at exactly ONE `pallas_call` per
+    device: the local body all-gathers the small (tb, d) test batch --
+    O(tb d) collective bytes instead of the three-stage path's O(tb n)
+    g/rank gather -- and runs the full fused kernel on its own (n/D, n)
+    row block, passing `axis_index * n/D` as the kernel's rect row-index
+    base (`row_offset`). Each device redundantly re-ranks the batch; that
+    trade (t n d / D extra FLOPs for n-free collectives and single-kernel
+    locality) is the Sec. 17 design argument.
     """
-    body = _stream_body(
-        make_update_kernel(mode, k, fill=fill, fill_static=fill_static,
-                           axis=axis),
-        int(k), _distance_fn(distance, distance_static),
-    )
     if donate is None:
         donate = jax.default_backend() != "cpu"
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import sti_megakernel
 
-    def local_step(acc, diag, xb, yb, mask, x_train, y_train):
-        # local views: acc (nl, n), diag (nl,), xb (tb/D, d), mask (tb/D,)
-        return body((acc, diag), xb, yb, mask, x_train, y_train)
+        params = dict(fill_static)
+
+        def local_step(acc, diag, xb, yb, mask, x_train, y_train):
+            # local views: acc (nl, n), diag (nl,), xb (tb/D, d)
+            nl = acc.shape[0]
+            xb_all = jax.lax.all_gather(xb, axis, axis=0, tiled=True)
+            yb_all = jax.lax.all_gather(yb, axis, axis=0, tiled=True)
+            mask_all = jax.lax.all_gather(mask, axis, axis=0, tiled=True)
+            return sti_megakernel(
+                acc, diag, xb_all, yb_all, mask_all, x_train, y_train,
+                k=int(k), mode=mode,
+                row_offset=jax.lax.axis_index(axis) * nl, **params,
+            )
+    else:
+        body = _stream_body(
+            make_update_kernel(mode, k, fill=fill, fill_static=fill_static,
+                               axis=axis),
+            int(k), _distance_fn(distance, distance_static),
+        )
+
+        def local_step(acc, diag, xb, yb, mask, x_train, y_train):
+            # local views: acc (nl, n), diag (nl,), xb (tb/D, d), mask
+            # (tb/D,)
+            return body((acc, diag), xb, yb, mask, x_train, y_train)
 
     from jax.sharding import PartitionSpec as P
 
@@ -896,6 +1017,8 @@ def make_sharded_point_step(
     distance_static: tuple = (),
     axis: str = "shards",
     donate: Optional[bool] = None,
+    fill: Optional[str] = None,
+    fill_static: tuple = (),
 ) -> Callable:
     """Multi-device form of `make_point_step` over a 1-D `mesh`:
 
@@ -907,17 +1030,40 @@ def make_sharded_point_step(
     the LOCAL (tb/D, n) slice, then ONE O(n) psum_scatter of the per-train
     partial sum (tiled block i lands on device i's rows). No O(n^2) state,
     no O(tb n) gather: point methods need no cross-device rank tables.
+
+    `fill="megakernel"` mirrors the sharded interaction megakernel: gather
+    the (tb, d) test batch, run ONE fused `pallas_call` per device against
+    its (n/D,) vector rows with `axis_index * n/D` as the row base -- the
+    psum_scatter disappears because every device folds the full batch.
     """
-    body = _stream_body(
-        make_update_kernel(method, k, opts=dict(method_static), axis=axis),
-        int(k), _distance_fn(distance, distance_static),
-    )
     if donate is None:
         donate = jax.default_backend() != "cpu"
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import point_megakernel
 
-    def local_step(vec, xb, yb, mask, x_train, y_train):
-        # local views: vec (n/D,), xb (tb/D, d), mask (tb/D,)
-        return body((vec,), xb, yb, mask, x_train, y_train)[0]
+        params = dict(fill_static)
+        opts = dict(method_static)
+
+        def local_step(vec, xb, yb, mask, x_train, y_train):
+            nl = vec.shape[0]
+            xb_all = jax.lax.all_gather(xb, axis, axis=0, tiled=True)
+            yb_all = jax.lax.all_gather(yb, axis, axis=0, tiled=True)
+            mask_all = jax.lax.all_gather(mask, axis, axis=0, tiled=True)
+            return point_megakernel(
+                vec, xb_all, yb_all, mask_all, x_train, y_train,
+                method=method, k=int(k), opts=opts,
+                row_offset=jax.lax.axis_index(axis) * nl, **params,
+            )
+    else:
+        body = _stream_body(
+            make_update_kernel(method, k, opts=dict(method_static),
+                               axis=axis),
+            int(k), _distance_fn(distance, distance_static),
+        )
+
+        def local_step(vec, xb, yb, mask, x_train, y_train):
+            # local views: vec (n/D,), xb (tb/D, d), mask (tb/D,)
+            return body((vec,), xb, yb, mask, x_train, y_train)[0]
 
     from jax.sharding import PartitionSpec as P
 
@@ -982,6 +1128,23 @@ def prepare_sharded_step(
     tb = max(1, int(test_batch))
     tb = -(-tb // num) * num
     tbl = tb // num
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import megakernel_static
+
+        mega = megakernel_static(fill_params)
+        step = make_sharded_step(
+            mesh, int(k), mode, "megakernel", mega, axis=axis,
+        )
+        resolved = {
+            # NOT rect_-prefixed: "megakernel" is its own resolvable name
+            # (session restore passes it straight back through here)
+            "fill": "megakernel",
+            "fill_params": dict(mega),
+            "distance": "fused",
+            "shards": int(num),
+            "test_batch": int(tb),
+        }
+        return step, resolved, mesh
     # the local fill sees the per-device (n/D, n) row block and ALL tb
     # gathered test points; the distance stage runs on (tb/D, n) slices
     fill_name, fill_static = resolve_rect_fill(
@@ -1053,6 +1216,20 @@ def prepare_sharded_stream_step(
             f"(per-device blocks are exactly (n/D,))"
         )
     tb = -(-max(1, int(test_batch)) // num) * num
+    if fill == "megakernel":
+        from repro.kernels.sti_megakernel import megakernel_static
+
+        inner = make_sharded_point_step(
+            mesh, method, int(k), _method_static(method_opts), axis=axis,
+            fill="megakernel", fill_static=megakernel_static(fill_params),
+        )
+        resolved = {
+            "fill": "megakernel",
+            "distance": "fused",
+            "shards": int(num),
+            "test_batch": int(tb),
+        }
+        return _vector_state(inner), resolved, mesh, spec
     dist_name, dist_static = resolve_distance(
         distance, tb // num, n, d, distance_params=distance_params,
         autotune=autotune,

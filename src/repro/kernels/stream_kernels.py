@@ -64,6 +64,8 @@ __all__ = [
     "accumulator_spec",
     "stream_methods",
     "has_stream_kernel",
+    "register_megakernel_tables",
+    "make_megakernel_tables",
     "compact_order",
     "register_refold_builder",
     "make_refold_kernel",
@@ -345,6 +347,99 @@ def _point_factory(contrib_fn: Callable, values_fn: Callable) -> Callable:
     return factory
 
 
+# ------------------------------------------------- megakernel sorted tables
+# The fused megakernel (`repro.kernels.sti_megakernel`) never materializes
+# the train-coordinate (tb, n) arrays the three-stage step gathers through
+# `order`: its streaming sort yields the batch directly in SORTED
+# coordinates, and the rank scatter happens at the accumulator tiles. The
+# closures below are the registered contrib/values closures algebraically
+# restated on the sorted stream -- legal because every one of them is
+# either elementwise in the sorted axis or a recurrence over sorted
+# positions, so the order-gather commutes out. Exactness is pinned by the
+# megakernel parity suite (tests/test_megakernel.py) and the C601 contract.
+
+_MEGAKERNEL_TABLES: dict[str, Callable] = {}
+
+
+def register_megakernel_tables(method: str, factory: Callable) -> None:
+    """Register `factory(k, opts) -> tables` building the method's
+    sorted-coordinate megakernel tables. Interaction factories return
+    `tables(d2_sorted, match_sorted, mask) -> (g, u)` ((tb, n) each, both
+    in sorted coordinates); point factories return
+    `tables(d2_sorted, match_sorted, mask) -> values` ((tb, n), value of
+    the train point at each sorted position). The validity mask folds in
+    here exactly as in `UpdateKernel.contrib`."""
+    _MEGAKERNEL_TABLES[method] = factory
+
+
+def make_megakernel_tables(method: str, k: int, *,
+                           opts: Optional[dict] = None) -> Callable:
+    """Resolve the sorted-coordinate table closure the fused megakernel
+    applies in-kernel for `method` (see `register_megakernel_tables`).
+    Raises KeyError for methods without a megakernel registration --
+    `fill="megakernel"` is only resolvable for those."""
+    if method not in _MEGAKERNEL_TABLES:
+        raise KeyError(
+            f"method {method!r} has no megakernel tables; registered: "
+            f"{sorted(_MEGAKERNEL_TABLES)}"
+        )
+    return _MEGAKERNEL_TABLES[method](int(k), dict(opts or {}))
+
+
+def _interaction_megatables(mode: str) -> Callable:
+    """sti/sii megakernel tables: the same u = match * mask/k contribution
+    and `superdiagonal_g` recurrence as `_interaction_factory`, minus the
+    train-coordinate gathers (the kernel's rank scatter replaces them)."""
+
+    def factory(k, opts):
+        def tables(d2s, match_s, mask):
+            u = match_s * (mask / k)[:, None]
+            return superdiagonal_g(u, k, mode=mode), u
+
+        return tables
+
+    return factory
+
+
+def _shapley_megatables(weighted: bool) -> Callable:
+    """knn_shapley/wknn megakernel tables: `knn_shapley_from_sorted` on the
+    (optionally distance-weighted) sorted contribution. `distance_weights`
+    is elementwise plus a permutation-invariant row statistic (the rbf
+    sigma2 row mean), so evaluating it on the SORTED distances matches the
+    three-stage path to float-summation order."""
+
+    def factory(k, opts):
+        def tables(d2s, match_s, mask):
+            if weighted:
+                from repro.core.wknn import distance_weights
+
+                w = distance_weights(d2s, opts.get("weights", "rbf"))
+                u = w * match_s * mask[:, None]
+            else:
+                u = match_s * mask[:, None]
+            from repro.core.knn_shapley import knn_shapley_from_sorted
+
+            return knn_shapley_from_sorted(u, k)
+
+        return tables
+
+    return factory
+
+
+def _loo_megatables(k, opts):
+    """loo megakernel tables: the `_loo_point_values` window delta on the
+    sorted stream (2-D iota: TPU Mosaic rejects 1-D iota in kernels)."""
+
+    def tables(d2s, match_s, mask):
+        u = match_s * mask[:, None]
+        n = u.shape[-1]
+        nxt = u[..., k:k + 1] if n > k else jnp.zeros_like(u[..., :1])
+        pos = jax.lax.broadcasted_iota(jnp.int32, u.shape, u.ndim - 1)
+        return jnp.where(pos < k, (u - nxt) / k, 0.0)
+
+    return tables
+
+
 # -------------------------------------------------------------- refold path
 # Incremental train-set mutation (the online valuation service's
 # add_points / remove_points) refolds CACHED per-batch intermediates --
@@ -545,3 +640,8 @@ register_update_kernel(
 register_update_kernel(
     "loo", POINT_STATE, _point_factory(_match_contrib, _loo_point_values)
 )
+register_megakernel_tables("sti", _interaction_megatables("sti"))
+register_megakernel_tables("sii", _interaction_megatables("sii"))
+register_megakernel_tables("knn_shapley", _shapley_megatables(False))
+register_megakernel_tables("wknn", _shapley_megatables(True))
+register_megakernel_tables("loo", _loo_megatables)

@@ -66,7 +66,10 @@ def main():
                          "pallas) for interaction methods; --engine sharded "
                          "resolves it against the rectangular fill registry "
                          "(Pallas row-block kernel on TPU, XLA block scan "
-                         "elsewhere). Point methods have no fill stage")
+                         "elsewhere). 'megakernel' fuses the whole step "
+                         "(distance -> streaming top-k -> update) into one "
+                         "Pallas kernel for ANY streaming method, point "
+                         "methods included (DESIGN.md Sec. 17)")
     ap.add_argument("--weights", default="rbf",
                     help="wknn weight kind (rbf|inverse|uniform)")
     ap.add_argument("--test-batch", type=int, default=256)

@@ -1,0 +1,403 @@
+"""Megakernel suite (ISSUE 10): the fused single-`pallas_call` valuation
+step must be bit-for-bit rank-identical and <=1e-5 value-identical to the
+three-stage fused step for all five methods, single-device and sharded,
+through checkpoint/restore, and with a bounded bf16 compute path.
+
+Property tests drive the online tile merge (`merge_sorted_tile`) as a
+streaming top-k against `jax.lax.top_k` and the stable argsort that
+`ranks_from_order` consumes, including duplicate distances and
+non-divisible tile widths. Multi-device cases run in subprocesses under 8
+forced host devices (jax locks the device count at first init).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_fallback import given, settings, st
+
+import repro  # noqa: F401
+from repro.core.sti_knn import ranks_from_order
+from repro.kernels.sti_megakernel import (
+    merge_sorted_tile,
+    streaming_merge_reference,
+)
+from repro.kernels.sti_pipeline import (
+    fused_sti_knn_interactions,
+    stream_point_values,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+POINT_METHODS = ("knn_shapley", "wknn", "loo")
+
+
+def _problem(n, t, d=6, classes=2, seed=0, integer=False):
+    rng = np.random.default_rng(seed)
+    if integer:
+        xs = rng.integers(-8, 9, size=(n, d)).astype(np.float32)
+        xt = rng.integers(-8, 9, size=(t, d)).astype(np.float32)
+    else:
+        xs = rng.normal(size=(n, d)).astype(np.float32)
+        xt = rng.normal(size=(t, d)).astype(np.float32)
+    ys = rng.integers(0, classes, size=(n,)).astype(np.int32)
+    yt = rng.integers(0, classes, size=(t,)).astype(np.int32)
+    return (jnp.asarray(xs), jnp.asarray(ys),
+            jnp.asarray(xt), jnp.asarray(yt))
+
+
+# ---------------------------------------------------- online merge property
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(3, 40),
+    t=st.integers(1, 4),
+    block_n=st.integers(1, 17),
+    dup=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streaming_full_width_matches_stable_argsort(n, t, block_n, dup,
+                                                     seed):
+    """Full-width streaming == jnp.argsort(stable) == ranks_from_order,
+    bit for bit, for any tile width (divisible or not) and with heavy
+    duplicate distances."""
+    rng = np.random.default_rng(seed)
+    d2 = rng.normal(size=(t, n)).astype(np.float32) ** 2
+    if dup:  # quantize hard so ties are everywhere
+        d2 = np.round(d2 * 2) / 2
+    match = rng.integers(0, 2, size=(t, n)).astype(np.float32)
+    d2s, idx, ms = streaming_merge_reference(
+        jnp.asarray(d2), jnp.asarray(match), block_n=block_n
+    )
+    order = jnp.argsort(jnp.asarray(d2), axis=-1, stable=True)
+    assert np.array_equal(np.asarray(idx), np.asarray(order))
+    ranks = np.zeros_like(np.asarray(order))
+    np.put_along_axis(ranks, np.asarray(order),
+                      np.broadcast_to(np.arange(n), (t, n)), axis=-1)
+    assert np.array_equal(ranks, np.asarray(ranks_from_order(order)))
+    got = np.take_along_axis(d2, np.asarray(order), axis=-1)
+    assert np.array_equal(np.asarray(d2s), got)
+    assert np.array_equal(
+        np.asarray(ms), np.take_along_axis(match, np.asarray(order), -1))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(6, 48),
+    k=st.sampled_from([1, 5]),
+    block_n=st.integers(1, 13),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_streaming_topk_matches_lax_top_k(n, k, block_n, seed):
+    """Truncated streaming (width k) == `jax.lax.top_k` of the negated
+    distances; index tie-break (smaller index first) matches on duplicate
+    distances too."""
+    rng = np.random.default_rng(seed)
+    d2 = np.round(rng.normal(size=(2, n)).astype(np.float32) ** 2, 1)
+    match = rng.integers(0, 2, size=(2, n)).astype(np.float32)
+    d2s, idx, _ = streaming_merge_reference(
+        jnp.asarray(d2), jnp.asarray(match), n_keep=k, block_n=block_n
+    )
+    neg_vals, top_idx = jax.lax.top_k(-jnp.asarray(d2), k)
+    assert np.array_equal(np.asarray(d2s), -np.asarray(neg_vals))
+    assert np.array_equal(np.asarray(idx), np.asarray(top_idx))
+
+
+def test_streaming_merge_deterministic_sweep():
+    """Hypothesis-free sweep of the same properties (runs even in offline
+    containers where the `_hypothesis_fallback` shim skips the `@given`
+    tests): tie-heavy data, non-divisible tile widths, k in {1, 5}."""
+    for seed, (n, t, block_n) in enumerate(
+            [(5, 1, 2), (17, 3, 4), (31, 2, 7), (40, 4, 13), (48, 1, 48)]):
+        rng = np.random.default_rng(100 + seed)
+        d2 = np.round(rng.normal(size=(t, n)).astype(np.float32) ** 2, 1)
+        match = rng.integers(0, 2, size=(t, n)).astype(np.float32)
+        d2s, idx, ms = streaming_merge_reference(
+            jnp.asarray(d2), jnp.asarray(match), block_n=block_n)
+        order = np.argsort(d2, axis=-1, kind="stable")
+        assert np.array_equal(np.asarray(idx), order), (n, t, block_n)
+        assert np.array_equal(
+            np.asarray(d2s), np.take_along_axis(d2, order, -1))
+        ranks = np.asarray(ranks_from_order(jnp.asarray(order)))
+        inv = np.zeros_like(order)
+        np.put_along_axis(inv, order,
+                          np.broadcast_to(np.arange(n), (t, n)), axis=-1)
+        assert np.array_equal(ranks, inv)
+        for k in (1, 5):
+            if k > n:
+                continue
+            dk, ik, _ = streaming_merge_reference(
+                jnp.asarray(d2), jnp.asarray(match), n_keep=k,
+                block_n=block_n)
+            neg_vals, top_idx = jax.lax.top_k(-jnp.asarray(d2), k)
+            assert np.array_equal(np.asarray(dk), -np.asarray(neg_vals))
+            assert np.array_equal(np.asarray(ik), np.asarray(top_idx))
+
+
+def test_merge_is_width_generic_and_associative_on_ragged_tiles():
+    """One irregular tile split (ragged padded batch shape) merges to the
+    same result as any other split of the same columns."""
+    rng = np.random.default_rng(3)
+    t, n = 3, 23
+    d2 = rng.normal(size=(t, n)).astype(np.float32) ** 2
+    match = rng.integers(0, 2, size=(t, n)).astype(np.float32)
+    want = streaming_merge_reference(jnp.asarray(d2), jnp.asarray(match),
+                                     block_n=n)  # single tile
+    for block in (1, 4, 7, 16):
+        got = streaming_merge_reference(
+            jnp.asarray(d2), jnp.asarray(match), block_n=block)
+        for a, b in zip(want, got):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_merge_sorted_tile_padded_columns_sort_last():
+    """+inf padded columns (and the service's large-but-finite dead-slot
+    sentinels) never displace real entries."""
+    run = (jnp.full((1, 4), jnp.inf), jnp.full((1, 4), 9, jnp.int32),
+           jnp.zeros((1, 4)))
+    d2 = jnp.asarray([[2.0, 1e30, 1.0, jnp.inf]])
+    idx = jnp.asarray([[0, 1, 2, 3]], dtype=jnp.int32)
+    match = jnp.asarray([[1.0, 1.0, 0.0, 1.0]])
+    d2s, idxs, ms = merge_sorted_tile(*run, d2, idx, match)
+    assert np.asarray(idxs)[0].tolist()[:3] == [2, 0, 1]
+    assert np.asarray(d2s)[0].tolist()[:3] == [
+        1.0, 2.0, float(np.float32(1e30))]
+
+
+# ----------------------------------------------------------- method parity
+@pytest.mark.parametrize("n", [64, 256])
+@pytest.mark.parametrize("mode", ["sti", "sii"])
+def test_interaction_parity_megakernel_vs_stages(n, mode):
+    t, k, tb = 11, 5, 4  # ragged: t % tb != 0
+    x, y, xt, yt = _problem(n, t, seed=10 + n)
+    want = fused_sti_knn_interactions(
+        x, y, xt, yt, k=k, mode=mode, fill="chunked", test_batch=tb)
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, k=k, mode=mode, fill="megakernel", test_batch=tb)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 256])
+@pytest.mark.parametrize("method", POINT_METHODS)
+def test_point_parity_megakernel_vs_stages(n, method):
+    t, k, tb = 11, 5, 4
+    x, y, xt, yt = _problem(n, t, classes=3, seed=20 + n)
+    want = stream_point_values(method, x, y, xt, yt, k, test_batch=tb)
+    got = stream_point_values(method, x, y, xt, yt, k, test_batch=tb,
+                              fill="megakernel")
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-5)
+
+
+def test_megakernel_matches_bruteforce_oracle():
+    """n=12: megakernel == the O(2^n) subset-enumeration oracle."""
+    from repro.core.sti_baseline import brute_force_sti
+
+    x, y, xt, yt = _problem(12, 4, d=4, seed=7)
+    want = brute_force_sti(np.asarray(x), np.asarray(y),
+                           np.asarray(xt), np.asarray(yt), 3)
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, k=3, fill="megakernel", test_batch=4)
+    np.testing.assert_allclose(want, np.asarray(got), atol=1e-5)
+
+
+def test_megakernel_explicit_tile_shapes_identical():
+    """Non-default (and non-divisible) tile shapes preserve the result.
+    The rank phase is bitwise tile-invariant (proven by the merge property
+    tests); the accumulator scatter sums tiles in a different order, so the
+    full step is compared to a tight float tolerance instead."""
+    x, y, xt, yt = _problem(40, 6, seed=9)
+    want = fused_sti_knn_interactions(
+        x, y, xt, yt, k=3, fill="megakernel", test_batch=6)
+    got = fused_sti_knn_interactions(
+        x, y, xt, yt, k=3, fill="megakernel", test_batch=6,
+        fill_params={"block_t": 4, "block_n": 7, "block_rows": 16,
+                     "block_cols": 12})
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got), atol=1e-6)
+
+
+# --------------------------------------------------------- mixed precision
+def test_bf16_exact_on_integer_data_all_methods():
+    """Integer features in [-8, 8]: every bf16 product is exact, so the
+    bf16 path must agree with f32 BITWISE (proving exact rank agreement)."""
+    x, y, xt, yt = _problem(64, 8, seed=11, integer=True)
+    bf = {"compute_dtype": "bfloat16"}
+    for mode in ("sti", "sii"):
+        a = fused_sti_knn_interactions(
+            x, y, xt, yt, k=5, mode=mode, fill="megakernel", test_batch=4)
+        b = fused_sti_knn_interactions(
+            x, y, xt, yt, k=5, mode=mode, fill="megakernel", test_batch=4,
+            fill_params=bf)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), mode
+    for method in POINT_METHODS:
+        a = stream_point_values(method, x, y, xt, yt, 5, test_batch=4,
+                                fill="megakernel")
+        b = stream_point_values(method, x, y, xt, yt, 5, test_batch=4,
+                                fill="megakernel", fill_params=bf)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), method
+
+
+def test_bf16_error_bounded_on_separated_data():
+    """Well-separated continuous clusters: bf16 distances round but ranks
+    hold, so values stay within 1e-2 of the f32 path."""
+    rng = np.random.default_rng(13)
+    n, t, d, k = 64, 8, 6, 5
+    centers = rng.normal(scale=40.0, size=(4, d)).astype(np.float32)
+    ys = rng.integers(0, 4, size=(n,)).astype(np.int32)
+    yt = rng.integers(0, 4, size=(t,)).astype(np.int32)
+    xs = centers[ys] + rng.normal(size=(n, d)).astype(np.float32)
+    xt = centers[yt] + rng.normal(size=(t, d)).astype(np.float32)
+    xs, ys, xt, yt = map(jnp.asarray, (xs, ys, xt, yt))
+    bf = {"compute_dtype": "bfloat16"}
+    a = fused_sti_knn_interactions(
+        xs, ys, xt, yt, k=k, fill="megakernel", test_batch=4)
+    b = fused_sti_knn_interactions(
+        xs, ys, xt, yt, k=k, fill="megakernel", test_batch=4,
+        fill_params=bf)
+    assert float(jnp.abs(a - b).max()) <= 1e-2
+    for method in POINT_METHODS:
+        va = stream_point_values(method, xs, ys, xt, yt, k, test_batch=4,
+                                 fill="megakernel")
+        vb = stream_point_values(method, xs, ys, xt, yt, k, test_batch=4,
+                                 fill="megakernel", fill_params=bf)
+        assert float(jnp.abs(va - vb).max()) <= 1e-2, method
+
+
+# ------------------------------------------------------- session lifecycle
+def test_mid_stream_checkpoint_restore_roundtrips_megakernel(tmp_path):
+    from repro.core.session import ValuationSession
+
+    x, y, xt, yt = _problem(48, 12, seed=5)
+    ref = ValuationSession(np.asarray(x), np.asarray(y), k=3, mode="sti",
+                          test_batch=4, fill="chunked")
+    ref.update(np.asarray(xt), np.asarray(yt))
+    want = np.asarray(ref.finalize().phi)
+
+    sess = ValuationSession(np.asarray(x), np.asarray(y), k=3, mode="sti",
+                           test_batch=4, fill="megakernel")
+    sess.update(np.asarray(xt[:8]), np.asarray(yt[:8]))
+    p = str(tmp_path / "ckpt.npz")
+    sess.checkpoint(p)
+    restored = ValuationSession.restore(p, np.asarray(x), np.asarray(y))
+    # the resolved megakernel fill survives the round trip as-is
+    assert restored._resolved["fill"] == "megakernel"
+    assert restored._resolved["distance"] == "fused"
+    restored.update(np.asarray(xt[8:]), np.asarray(yt[8:]))
+    got = np.asarray(restored.finalize().phi)
+    np.testing.assert_allclose(want, got, atol=1e-5)
+
+
+# --------------------------------------------------------------- contracts
+def test_contract_checker_proves_single_pallas_call():
+    from repro.analysis.contracts import check_megakernel_contract
+
+    findings = check_megakernel_contract(n=32, d=4, k=3, tb=4)
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ------------------------------------------------------- autotune schema
+def test_autotune_key_carries_platform_segment(tmp_path):
+    from repro.kernels import autotune as at
+
+    key = at._key("fill", "cpu", 64, 8, devices=1)
+    parts = key.split(":")
+    assert parts[0] == "fill" and parts[1] == "cpu"
+    assert parts[2] == at.device_platform("cpu")
+    assert parts[3] == "dev1"
+    # a foreign backend string produces a DIFFERENT platform slug, so a
+    # CPU-tuned entry can never be served to a TPU lookup
+    assert at._key("fill", "tpu", 64, 8, devices=1) != key
+
+    # legacy (pre-schema) cache files are invalidated wholesale...
+    legacy = tmp_path / "legacy.json"
+    legacy.write_text(json.dumps(
+        {"fill:cpu:dev1:n64:t8": {"fill": "xla", "params": {}}}))
+    assert at._load(str(legacy)) == {}
+    # ...while a fresh save stamps the schema and round-trips cleanly
+    entry = {key: {"fill": "chunked", "params": {"chunk": 1}}}
+    at._save(str(legacy), entry)
+    raw = json.loads(legacy.read_text())
+    assert raw[at._SCHEMA_KEY] == at._SCHEMA
+    assert at._load(str(legacy)) == entry
+
+
+def test_megastep_autotune_roundtrip_is_platform_keyed(tmp_path):
+    from repro.kernels import autotune as at
+
+    cache = str(tmp_path / "mega.json")
+    # untuned default keeps the three-stage step everywhere
+    assert at.best_megastep(32, 6, 4, 3, path=cache) == ("stages", {})
+    name, params = at.autotune_megastep(32, 4, 3, 6, path=cache)
+    assert name in ("stages", "megakernel")
+    assert at.lookup_megastep(32, 6, 4, path=cache) == (name, params)
+    (key,) = at._load(cache)
+    assert key.startswith("megastep_d4:")
+    assert f":{at.device_platform()}:" in key
+    # same sizes under another backend string miss (platform isolation)
+    assert at.lookup_megastep(32, 6, 4, backend="tpu", path=cache) is None
+
+
+# ------------------------------------------------------------- sharded
+def run_py(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=str(REPO / "src"))
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert p.returncode == 0, f"stdout:\n{p.stdout}\nstderr:\n{p.stderr}"
+    return p.stdout
+
+
+def test_sharded_megakernel_parity_8dev():
+    """All five methods under 8 forced host devices: the sharded megakernel
+    (one kernel per device per step, row_offset-indexed) matches the
+    single-device three-stage step to 1e-5."""
+    out = run_py("""
+    import numpy as np, jax, jax.numpy as jnp
+    import repro
+    from repro.kernels.sti_pipeline import (
+        fused_sti_knn_interactions, sharded_sti_knn_interactions,
+        prepare_sharded_stream_step, stream_point_values, pad_test_batch)
+
+    assert jax.device_count() == 8
+    rng = np.random.default_rng(0)
+    n, t, d, k = 64, 11, 4, 3
+    xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ys = jnp.asarray(rng.integers(0, 2, size=(n,)).astype(np.int32))
+    xt = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    yt = jnp.asarray(rng.integers(0, 2, size=(t,)).astype(np.int32))
+
+    for mode in ("sti", "sii"):
+        want = fused_sti_knn_interactions(
+            xs, ys, xt, yt, k=k, mode=mode, fill="chunked", test_batch=8)
+        got = sharded_sti_knn_interactions(
+            xs, ys, xt, yt, k=k, mode=mode, fill="megakernel", test_batch=8)
+        err = float(jnp.abs(want - got).max())
+        assert err <= 1e-5, (mode, err)
+
+    for method in ("knn_shapley", "wknn", "loo"):
+        want = stream_point_values(method, xs, ys, xt, yt, k, test_batch=8)
+        step, resolved, mesh, spec = prepare_sharded_stream_step(
+            method, n, d, k, test_batch=8, fill="megakernel")
+        assert resolved["fill"] == "megakernel"
+        tb = resolved["test_batch"]
+        state = spec.init(n)
+        for s in range(0, t, tb):
+            xb, yb, mask = pad_test_batch(xt[s:s+tb], yt[s:s+tb], tb)
+            state = step(state, xb, yb, mask, xs, ys)
+        got = spec.result_arrays(state, t)["point_values"]
+        err = float(jnp.abs(want - got).max())
+        assert err <= 1e-5, (method, err)
+    print("OK")
+    """)
+    assert "OK" in out

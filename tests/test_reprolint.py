@@ -282,6 +282,56 @@ def test_hostsync_rule_is_path_scoped():
     assert lint_source(header, "serving/engine.py", codes={"R701"}) == []
 
 
+# R501 kernel-body extension: casts hoisted into locals inside a Pallas
+# kernel body must still trip; preferred_element_type still passes.
+_R501_KERNEL_TRIP = """
+import functools
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _kern(x_ref, w_ref, o_ref, *, compute_dtype):
+    xq = x_ref[...].astype(compute_dtype)
+    w = w_ref[...].astype(compute_dtype)
+    o_ref[...] = jax.lax.dot_general(xq, w, (((1,), (0,)), ((), ())))
+
+def run(x, w):
+    kernel = functools.partial(_kern, compute_dtype=jnp.bfloat16)
+    return pl.pallas_call(
+        kernel, out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    )(x, w)
+"""
+
+_R501_KERNEL_PASS = _R501_KERNEL_TRIP.replace(
+    "jax.lax.dot_general(xq, w, (((1,), (0,)), ((), ())))",
+    "jax.lax.dot_general(xq, w, (((1,), (0,)), ((), ())),\n"
+    "        preferred_element_type=jnp.float32)",
+)
+
+
+def test_r501_trips_on_hoisted_cast_in_kernel_body():
+    got = lint_source(_R501_KERNEL_TRIP, codes={"R501"})
+    assert {f.code for f in got} == {"R501"}
+    assert len(got) == 1
+    assert "kernel" in got[0].message
+
+
+def test_r501_passes_kernel_body_with_preferred_element_type():
+    assert lint_source(_R501_KERNEL_PASS, codes={"R501"}) == []
+
+
+def test_r501_hoisted_cast_outside_kernel_body_stays_quiet():
+    # the name-tracking pass is scoped to kernel bodies: ordinary functions
+    # keep the literal-operand behaviour (no new false positives)
+    plain = """
+import jax.numpy as jnp
+def mm(a, b):
+    aq = a.astype(jnp.bfloat16)
+    return jnp.dot(aq, b)
+"""
+    assert lint_source(plain, codes={"R501"}) == []
+
+
 def test_all_rule_codes_have_fixtures():
     # ISSUE acceptance: >= 6 distinct rule codes, each with trip + pass
     from repro.analysis.rules import all_rules
